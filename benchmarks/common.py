@@ -1,0 +1,270 @@
+"""Shared benchmark infrastructure: baseline caches (TextCache, ASTCache,
+NL-to-SQL+AST) and the evaluation runner with false-hit auditing."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import re
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,  # noqa: E402
+                        SemanticCacheMiddleware, SimulatedLLM)
+from repro.core import sqlparse as sp  # noqa: E402
+from repro.core.signature import Signature  # noqa: E402
+from repro.core.sql_canon import CanonicalizationError  # noqa: E402
+from repro.olap.executor import OlapExecutor  # noqa: E402
+from repro.workloads.render import Style, render  # noqa: E402
+from repro.workloads.variants import rename_aliases  # noqa: E402
+
+QUALIFIED = ("customer region", "supplier region", "customer city", "supplier city",
+             "customer nation", "supplier nation", "pickup zone", "dropoff zone",
+             "pickup borough", "dropoff borough")
+
+N_FACT = int(os.environ.get("REPRO_BENCH_FACT_ROWS", "40000"))
+
+_WL_CACHE: dict[str, object] = {}
+
+
+def get_workload(name: str):
+    if name not in _WL_CACHE:
+        from repro.workloads import nyc_tlc, ssb, tpcds
+
+        _WL_CACHE[name] = {"ssb": ssb, "nyc_tlc": nyc_tlc, "tpcds": tpcds}[name].build(
+            n_fact=N_FACT)
+    return _WL_CACHE[name]
+
+
+# ------------------------------------------------------------------ keyings
+
+
+def text_key(sql: str) -> str:
+    """Normalized-text cache key (TextCache baseline)."""
+    s = re.sub(r"--[^\n]*", " ", sql)
+    s = re.sub(r"/\*.*?\*/", " ", s, flags=re.S)
+    s = s.lower().replace(";", " ")
+    return re.sub(r"\s+", " ", s).strip()
+
+
+def ast_key(sql: str) -> str | None:
+    """AST-canonical cache key (ASTCache baseline): positional aliases,
+    sorted predicates/joins/group-by, fixed rendering style.  Does NOT unify
+    time representations, BETWEEN<->inequalities, or commuted expressions —
+    that is precisely the gap intent signatures close."""
+    try:
+        q = sp.parse(sql)
+    except (sp.SQLSyntaxError, sp.UnsupportedQuery):
+        return None
+    q = rename_aliases(q, "tN")
+    style = Style(upper_keywords=False, newlines=False)
+    q = dataclasses.replace(
+        q,
+        joins=tuple(sorted(q.joins, key=lambda j: j.table)),
+        where=tuple(sorted(q.where, key=lambda p: _pred_key(p, style))),
+        group_by=tuple(sorted(q.group_by, key=lambda c: (c.table or "", c.column))),
+    )
+    # join order changes alias numbering; renormalize once more
+    q = rename_aliases(q, "tN")
+    return render(q, style)
+
+
+def _pred_key(p, style):
+    from repro.workloads.render import render_predicate
+
+    return render_predicate(p, style)
+
+
+def sql_from_signature(sig: Signature, schema) -> str:
+    """Deterministic SQL rendering of a signature (the NL-to-SQL baseline's
+    text-to-SQL stage)."""
+    sel = []
+    for i, m in enumerate(sig.measures):
+        if m.agg == "COUNT_DISTINCT":
+            sel.append(f"COUNT(DISTINCT {m.expr}) AS m{i}")
+        elif m.expr == "*":
+            sel.append(f"COUNT(*) AS m{i}")
+        else:
+            sel.append(f"{m.agg}({m.expr}) AS m{i}")
+    sel = [*sig.levels, *sel]
+    dims = sorted({ref.split(".")[0] for ref in sig.levels}
+                  | {f.col.split(".")[0] for f in sig.filters}
+                  | {t for m in sig.measures if m.expr != "*"
+                     for t in _expr_tables(m.expr)})
+    dims = [d for d in dims if d != schema.fact.name]
+    joins = " ".join(
+        f"JOIN {d} ON {schema.fact.name}.{schema.dimension(d).fact_fk} = "
+        f"{d}.{schema.dimension(d).pk}" for d in sorted(dims))
+    where = []
+    for f in sig.filters:
+        if isinstance(f.val, tuple):
+            vals = ", ".join(_lit(v) for v in f.val)
+            where.append(f"{f.col} in ({vals})")
+        else:
+            where.append(f"{f.col} {f.op} {_lit(f.val)}")
+    if sig.time_window is not None and schema.fact.date_column:
+        dc = f"{schema.fact.name}.{schema.fact.date_column}"
+        where.append(f"{dc} >= '{sig.time_window.start}'")
+        where.append(f"{dc} < '{sig.time_window.end}'")
+    parts = [f"SELECT {', '.join(sel)}", f"FROM {schema.fact.name}", joins]
+    if where:
+        parts.append("WHERE " + " AND ".join(sorted(where)))
+    if sig.levels:
+        parts.append("GROUP BY " + ", ".join(sig.levels))
+    for h in sig.having:
+        m = sig.measures[h.measure]
+        expr = "COUNT(*)" if m.expr == "*" else f"{m.agg}({m.expr})"
+        parts.append(f"HAVING {expr} {h.op} {_lit(h.val)}")
+    if sig.order_by:
+        keys = []
+        for o in sig.order_by:
+            k = f"m{o.key.split(':')[1]}" if o.key.startswith("measure:") else o.key
+            keys.append(k + (" DESC" if o.desc else ""))
+        parts.append("ORDER BY " + ", ".join(keys))
+    if sig.limit is not None:
+        parts.append(f"LIMIT {sig.limit}")
+    return " ".join(p for p in parts if p)
+
+
+def _expr_tables(expr: str) -> set[str]:
+    return set(re.findall(r"\b([a-z_][a-z0-9_]*)\.", expr))
+
+
+def _lit(v) -> str:
+    if isinstance(v, str):
+        return "'" + v.replace("'", "''") + "'"
+    if isinstance(v, float) and v == int(v):
+        return str(int(v))
+    return str(v)
+
+
+# ------------------------------------------------------------------ methods
+
+
+@dataclasses.dataclass
+class MethodResult:
+    method: str
+    workload: str
+    total: int = 0
+    hits: int = 0
+    misses: int = 0
+    bypasses: int = 0
+    false_hits: int = 0
+    backend_execs: int = 0
+    distinct_keys: int = 0
+    sql_queries: int = 0
+    lookup_ms: list = dataclasses.field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.total if self.total else 0.0
+
+    @property
+    def reduction(self) -> float:
+        """Queries per cache key over the processed (SQL-capable) subset."""
+        n = self.sql_queries or self.total
+        return n / self.distinct_keys if self.distinct_keys else 0.0
+
+
+class KeyedCache:
+    """Hit-rate harness for key-based baselines."""
+
+    def __init__(self):
+        self.store: set[str] = set()
+
+    def access(self, key: str | None) -> str:
+        if key is None:
+            return "bypass"
+        if key in self.store:
+            return "hit"
+        self.store.add(key)
+        return "miss"
+
+
+def run_method(method: str, wl, queries, model: str = "gpt-4o-mini",
+               audit_false_hits: bool = False) -> MethodResult:
+    res = MethodResult(method, wl.name, total=len(queries))
+    if method in ("text", "ast"):
+        cache = KeyedCache()
+        for q in queries:
+            if q.kind != "sql":
+                res.misses += 1  # SQL-only baselines cannot serve NL
+                continue
+            res.sql_queries += 1
+            t0 = time.perf_counter()
+            key = text_key(q.text) if method == "text" else ast_key(q.text)
+            status = cache.access(key)
+            res.lookup_ms.append((time.perf_counter() - t0) * 1e3)
+            if status == "hit":
+                res.hits += 1
+            elif status == "miss":
+                res.misses += 1
+                res.backend_execs += 1
+            else:
+                res.bypasses += 1
+                res.backend_execs += 1
+        res.distinct_keys = len(cache.store)
+        return res
+
+    if method == "nl2sql_ast":
+        cache = KeyedCache()
+        llm = MemoizedNL(SimulatedLLM(wl.vocab, model=model))
+        for q in queries:
+            t0 = time.perf_counter()
+            if q.kind == "sql":
+                key = ast_key(q.text)
+            else:
+                r = llm.canonicalize(q.text)
+                key = None
+                if r.signature is not None:
+                    try:
+                        key = ast_key(sql_from_signature(r.signature, wl.schema))
+                    except (CanonicalizationError, KeyError, AttributeError):
+                        key = None
+            status = cache.access(key)
+            res.lookup_ms.append((time.perf_counter() - t0) * 1e3)
+            res.sql_queries += 1
+            if status == "hit":
+                res.hits += 1
+            elif status == "miss":
+                res.misses += 1
+                res.backend_execs += 1
+            else:
+                res.bypasses += 1
+                res.backend_execs += 1
+        res.distinct_keys = len(cache.store)
+        return res
+
+    # ---- llmsig: the full middleware
+    backend = OlapExecutor(wl.dataset, impl="numpy")
+    oracle = OlapExecutor(wl.dataset, impl="numpy") if audit_false_hits else None
+    cache = SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper())
+    llm = MemoizedNL(SimulatedLLM(wl.vocab, model=model))
+    mw = SemanticCacheMiddleware(
+        wl.schema, backend, cache, nl=llm,
+        policy=SafetyPolicy.balanced(wl.spatial_ambiguous, qualified=QUALIFIED))
+    for q in queries:
+        r = mw.query_sql(q.text) if q.kind == "sql" else mw.query_nl(q.text)
+        res.lookup_ms.append(r.lookup_ms + r.canon_ms)
+        res.sql_queries += 1
+        if r.hit:
+            res.hits += 1
+            if oracle is not None:
+                direct = oracle.execute(r.signature)
+                if not r.table.equals(direct, ordered=bool(r.signature.order_by)):
+                    res.false_hits += 1
+        elif r.status == "miss":
+            res.misses += 1
+        else:
+            res.bypasses += 1
+    res.backend_execs = backend.executions
+    res.distinct_keys = len(cache)
+    return res
+
+
+def med_p95(values):
+    if not values:
+        return 0.0, 0.0
+    v = sorted(values)
+    return v[len(v) // 2], v[min(len(v) - 1, int(len(v) * 0.95))]

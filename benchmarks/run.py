@@ -1,0 +1,55 @@
+"""Benchmark harness — one function per paper table.  Prints the markdown
+report to stdout and ``name,us_per_call,derived`` CSV lines at the end."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import roofline, tables
+
+    sections = [
+        ("table1", tables.table1_hitrate),
+        ("table2", tables.table2_adversarial),
+        ("table3", tables.table3_safety),
+        ("table4", tables.table4_overhead),
+        ("table5", tables.table5_profiles),
+        ("rq4", tables.rq4_derivations),
+        ("birdlike", tables.birdlike_eval),
+    ]
+    all_csv = []
+    for name, fn in sections:
+        t0 = time.perf_counter()
+        lines, csv = fn()
+        dt = time.perf_counter() - t0
+        print("\n".join(lines))
+        print(f"\n[{name} completed in {dt:.1f}s]\n")
+        all_csv.extend(csv)
+
+    if os.path.exists("results/dryrun.json"):
+        for mesh in ("single", "multi"):
+            lines, csv = roofline.report("results/dryrun.json", mesh=mesh)
+            print("\n".join(lines))
+            print()
+            all_csv.extend(csv)
+        import json
+
+        with open("results/dryrun.json") as f:
+            res = json.load(f)
+        print("## §Perf — measured sharding variants (see EXPERIMENTS.md §Perf)")
+        print("\n".join(roofline.variants_table(res)))
+        print()
+    else:
+        print("(results/dryrun.json missing — run `python -m repro.launch.dryrun --all`)")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in all_csv:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

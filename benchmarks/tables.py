@@ -1,0 +1,332 @@
+"""Paper-table benchmarks (one function per table/figure).
+
+Every function returns (markdown_lines, csv_rows) where csv rows follow
+``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import datetime as _dt
+import time
+
+from .common import (QUALIFIED, MethodResult, get_workload, med_p95, run_method)
+
+METHODS = [("TextCache", "text"), ("ASTCache", "ast"),
+           ("NL-to-SQL+AST", "nl2sql_ast"), ("LLMSigCache", "llmsig")]
+WORKLOADS = ["nyc_tlc", "ssb", "tpcds"]
+
+
+# --------------------------------------------------------------- Table 1
+
+
+def table1_hitrate():
+    lines = ["## Table 1 — Cache performance by method",
+             "| Method | NYC TLC | SSB | TPC-DS | Avg | Red.NYC | Red.SSB | Red.DS |",
+             "|---|---|---|---|---|---|---|---|"]
+    csv = []
+    results: dict[tuple, MethodResult] = {}
+    for disp, method in METHODS:
+        rates, reds = [], []
+        t0 = time.perf_counter()
+        for wname in WORKLOADS:
+            wl = get_workload(wname)
+            queries = wl.queries(order="sequential")
+            r = run_method(method, wl, queries, audit_false_hits=(method == "llmsig"))
+            results[(method, wname)] = r
+            rates.append(r.hit_rate)
+            reds.append(r.reduction)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        avg = sum(rates) / len(rates)
+        lines.append(
+            f"| {disp} | {rates[0]*100:.1f} | {rates[1]*100:.1f} | {rates[2]*100:.1f} "
+            f"| {avg*100:.1f} | {reds[0]:.1f}x | {reds[1]:.1f}x | {reds[2]:.1f}x |")
+        csv.append((f"table1_{method}", dt_us, f"avg_hit={avg*100:.1f}%"))
+    fh = sum(results[("llmsig", w)].false_hits for w in WORKLOADS)
+    total_exec = {m: sum(results[(m, w)].backend_execs for w in WORKLOADS)
+                  for _, m in METHODS}
+    total_q = sum(results[("llmsig", w)].total for w in WORKLOADS)
+    savings = 1 - total_exec["llmsig"] / total_q
+    lines.append("")
+    lines.append(f"False hits (LLMSigCache, audited per query): **{fh}**  |  "
+                 f"backend-compute saving: **{savings*100:.1f}%** "
+                 f"({total_exec['llmsig']} executions / {total_q} queries; "
+                 f"paper: 85-90%)")
+    csv.append(("table1_false_hits", 0.0, str(fh)))
+    csv.append(("table1_backend_saving", 0.0, f"{savings*100:.1f}%"))
+    return lines, csv
+
+
+# --------------------------------------------------------------- Table 2
+
+
+def _adversarial_results(model: str):
+    from repro.core import SimulatedLLM
+    from repro.workloads import adversarial
+
+    qs = adversarial.build()
+    vocabs = {w: get_workload(w).vocab for w in WORKLOADS}
+    llms = {k: SimulatedLLM(v, model=model) for k, v in vocabs.items()}
+    res = [llms[q.schema].canonicalize(q.text, now=None) for q in qs]
+    return qs, res
+
+
+def table2_adversarial():
+    from repro.workloads import adversarial
+
+    t0 = time.perf_counter()
+    qs, res = _adversarial_results("gpt-4o-mini")
+    sc = adversarial.score(qs, res)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    order = ["metric", "time", "dimension", "aggregation", "compositional"]
+    lines = ["## Table 2 — Semantic accuracy on 63 adversarial NL queries",
+             "| Ambiguity type | N | Correct | Wrong | Invalid |", "|---|---|---|---|---|"]
+    tot = {"correct": 0, "wrong": 0, "invalid": 0}
+    for t in order:
+        b = sc["per_type"][t]
+        n = sum(b.values())
+        lines.append(f"| {t} | {n} | {b['correct']} | {b['wrong']} | {b['invalid']} |")
+        for k in tot:
+            tot[k] += b[k]
+    lines.append(f"| **Total** | 63 | {tot['correct']} | {tot['wrong']} | {tot['invalid']} |")
+    acc = tot["correct"] / 63
+    lines.append(f"\nAccuracy {acc*100:.1f}% (paper: 44.4%)")
+    return lines, [("table2_accuracy", dt_us, f"{acc*100:.1f}%")]
+
+
+# --------------------------------------------------------------- Table 3
+
+
+def table3_safety():
+    from repro.core.safety import SafetyPolicy, gate_nl
+    from repro.workloads import adversarial
+
+    qs, res = _adversarial_results("gpt-4o-mini")
+    t0 = time.perf_counter()
+    lines = ["## Table 3a — Confidence threshold: coverage vs precision",
+             "| Threshold | Coverage | Precision |", "|---|---|---|"]
+    csv = []
+    for thr in (0.3, 0.5, 0.7, 0.9):
+        accepted = correct = 0
+        for q, r in zip(qs, res):
+            if r.signature is None or r.confidence < thr:
+                continue
+            accepted += 1
+            if q.gold is not None and r.signature.key() == q.gold.key():
+                correct += 1
+        cov = accepted / len(qs)
+        prec = correct / accepted if accepted else 0.0
+        lines.append(f"| {thr} | {cov*100:.1f}% | {prec*100:.1f}% |")
+        csv.append((f"table3_thr_{thr}", 0.0, f"cov={cov*100:.1f}%,prec={prec*100:.1f}%"))
+    # 3b: schema heuristics
+    spatial = {w: get_workload(w).spatial_ambiguous for w in WORKLOADS}
+    lines += ["", "## Table 3b — Schema-specific heuristics",
+              "| | Validation only | With heuristics |", "|---|---|---|"]
+    for label, use_heur in (("validation", False), ("heuristics", True)):
+        accepted = correct = wrong = 0
+        for q, r in zip(qs, res):
+            if r.signature is None:
+                continue
+            if use_heur:
+                pol = SafetyPolicy(confidence_threshold=None,
+                                   spatial_ambiguous_terms=tuple(spatial[q.schema]),
+                                   spatial_qualified_phrases=QUALIFIED)
+                if not gate_nl(pol, q.text, r, now=None):
+                    continue
+            accepted += 1
+            if q.gold is not None and r.signature.key() == q.gold.key():
+                correct += 1
+            else:
+                wrong += 1
+        prec = correct / accepted if accepted else 0.0
+        bypass = 1 - accepted / len(qs)
+        if label == "validation":
+            row_p, row_w, row_b = [f"{prec*100:.1f}%"], [str(wrong)], [f"{bypass*100:.1f}%"]
+        else:
+            row_p.append(f"{prec*100:.1f}%")
+            row_w.append(str(wrong))
+            row_b.append(f"{bypass*100:.1f}%")
+    lines.append(f"| Precision | {row_p[0]} | {row_p[1]} |")
+    lines.append(f"| Wrong signatures | {row_w[0]} | {row_w[1]} |")
+    lines.append(f"| Bypass rate | {row_b[0]} | {row_b[1]} |")
+    dt_us = (time.perf_counter() - t0) * 1e6
+    csv.append(("table3_heuristics", dt_us,
+                f"prec {row_p[0]}->{row_p[1]}, wrong {row_w[0]}->{row_w[1]}"))
+    return lines, csv
+
+
+# --------------------------------------------------------------- Table 4
+
+
+def table4_overhead():
+    wl = get_workload("nyc_tlc")
+    queries = wl.queries(order="sequential")
+    r = run_method("llmsig", wl, queries)
+    sql_lat = [m for q, m in zip(queries, r.lookup_ms) if q.kind == "sql"]
+    nl_lat = [m for q, m in zip(queries, r.lookup_ms) if q.kind == "nl"]
+    med_s, p95_s = med_p95(sql_lat)
+    med_n, p95_n = med_p95(nl_lat)
+    lines = ["## Table 4a — Latency (ms) by scenario",
+             "| Scenario | Median | P95 |", "|---|---|---|",
+             f"| SQL canonicalize+lookup | {med_s:.3f} | {p95_s:.3f} |",
+             f"| NL canonicalize+lookup (simulated LLM) | {med_n:.3f} | {p95_n:.3f} |",
+             "",
+             "(The paper's NL first-occurrence cost of ~1.3 s is GPT-4o-mini API "
+             "latency; our simulated canonicalizer runs in-process.  The in-framework "
+             "JAX canonicalizer path is measured in the quickstart example.)", ""]
+    csv = [("table4_sql_lookup", med_s * 1e3, f"p95={p95_s:.3f}ms"),
+           ("table4_nl_lookup", med_n * 1e3, f"p95={p95_n:.3f}ms")]
+
+    # 4b: LRU capacity sensitivity on NYC TLC
+    lines += ["## Table 4b — Hit rate (%) vs cache size (NYC TLC)",
+              "| Ordering | 10% | 25% | 50% | 75% | 100% |", "|---|---|---|---|---|---|"]
+    n_intents = len(wl.intents)
+    for order in ("sequential", "random", "interleaved", "zipf"):
+        row = [order]
+        for frac in (0.10, 0.25, 0.50, 0.75, 1.0):
+            cap = max(1, int(round(frac * n_intents)))
+            qs = wl.queries(order=order, seed=3)
+            rr = _run_llmsig_capacity(wl, qs, cap)
+            row.append(f"{rr*100:.1f}")
+        lines.append("| " + " | ".join(row) + " |")
+        csv.append((f"table4b_{order}", 0.0, ",".join(row[1:])))
+    return lines, csv
+
+
+def _run_llmsig_capacity(wl, queries, capacity):
+    from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,
+                            SemanticCacheMiddleware, SimulatedLLM)
+    from repro.olap.executor import OlapExecutor
+
+    backend = OlapExecutor(wl.dataset, impl="numpy")
+    cache = SemanticCache(wl.schema, capacity=capacity,
+                          level_mapper=wl.dataset.level_mapper())
+    mw = SemanticCacheMiddleware(
+        wl.schema, backend, cache, nl=MemoizedNL(SimulatedLLM(wl.vocab, model="oracle")),
+        policy=SafetyPolicy.balanced(wl.spatial_ambiguous, qualified=QUALIFIED))
+    hits = 0
+    for q in queries:
+        r = mw.query_sql(q.text) if q.kind == "sql" else mw.query_nl(q.text)
+        hits += r.hit
+    return hits / len(queries)
+
+
+# --------------------------------------------------------------- Table 5
+
+
+def table5_profiles():
+    from repro.core.safety import SafetyPolicy, gate_nl
+    from repro.workloads import adversarial
+
+    qs, res = _adversarial_results("gpt-4o-mini")
+    spatial = {w: get_workload(w).spatial_ambiguous for w in WORKLOADS}
+    profiles = {
+        "Conservative": lambda s: SafetyPolicy.conservative(s, QUALIFIED),
+        "Balanced": lambda s: SafetyPolicy.balanced(s, QUALIFIED),
+        "Aggressive": lambda s: SafetyPolicy.aggressive(),
+    }
+    lines = ["## Table 5a — Configuration profiles (adversarial, N=63)",
+             "| Setting | Conservative | Balanced | Aggressive |", "|---|---|---|---|"]
+    rows = {"precision": [], "coverage": [], "wrong": []}
+    for pname, mk in profiles.items():
+        accepted = correct = wrong = 0
+        for q, r in zip(qs, res):
+            if r.signature is None:
+                continue
+            pol = mk(tuple(spatial[q.schema]))
+            if not gate_nl(pol, q.text, r, now=None):
+                continue
+            accepted += 1
+            if q.gold is not None and r.signature.key() == q.gold.key():
+                correct += 1
+            else:
+                wrong += 1
+        rows["precision"].append(f"{(correct / accepted if accepted else 0)*100:.1f}%")
+        rows["coverage"].append(f"{accepted/len(qs)*100:.1f}%")
+        rows["wrong"].append(str(wrong))
+    lines.append("| NL precision | " + " | ".join(rows["precision"]) + " |")
+    lines.append("| NL coverage | " + " | ".join(rows["coverage"]) + " |")
+    lines.append("| Wrong cached | " + " | ".join(rows["wrong"]) + " |")
+
+    lines += ["", "## Table 5b — LLM ablation (adversarial)",
+              "| Model | Correct | Wrong | Invalid | Accuracy |", "|---|---|---|---|---|"]
+    csv = []
+    for model in ("gpt-4o-mini", "claude-3.5-haiku"):
+        from repro.workloads import adversarial as adv
+
+        q2, r2 = _adversarial_results(model)
+        sc = adv.score(q2, r2)
+        tot = {"correct": 0, "wrong": 0, "invalid": 0}
+        for b in sc["per_type"].values():
+            for k in tot:
+                tot[k] += b[k]
+        acc = tot["correct"] / 63
+        lines.append(f"| {model} | {tot['correct']} | {tot['wrong']} | "
+                     f"{tot['invalid']} | {acc*100:.1f}% |")
+        csv.append((f"table5_{model}", 0.0, f"{acc*100:.1f}%"))
+    return lines, csv
+
+
+# ------------------------------------------------------------------- RQ4
+
+
+def rq4_derivations():
+    from repro.core import SemanticCache, SemanticCacheMiddleware
+    from repro.olap.executor import OlapExecutor
+    from repro.workloads import hierarchical
+
+    wl = get_workload("ssb")
+    stream = hierarchical.build_stream(20)
+    lines = ["## RQ4 — Derivations on the SSB hierarchical workload",
+             "| Derivations | Hit rate | Exact | Roll-up | Filter-down | False hits |",
+             "|---|---|---|---|---|---|"]
+    csv = []
+    oracle = OlapExecutor(wl.dataset, impl="numpy")
+    for enabled in (False, True):
+        backend = OlapExecutor(wl.dataset, impl="numpy")
+        cache = SemanticCache(wl.schema, enable_rollup=enabled,
+                              enable_filterdown=enabled,
+                              level_mapper=wl.dataset.level_mapper())
+        mw = SemanticCacheMiddleware(wl.schema, backend, cache)
+        hits = fh = 0
+        t0 = time.perf_counter()
+        for q in stream:
+            r = mw.query_sql(q.text)
+            if r.hit:
+                hits += 1
+                if not r.table.equals(oracle.execute(r.signature)):
+                    fh += 1
+        dt_us = (time.perf_counter() - t0) * 1e6 / len(stream)
+        s = cache.stats
+        lines.append(f"| {'on' if enabled else 'off'} | {hits/len(stream)*100:.0f}% "
+                     f"| {s.hits_exact} | {s.hits_rollup} | {s.hits_filterdown} | {fh} |")
+        csv.append((f"rq4_deriv_{'on' if enabled else 'off'}", dt_us,
+                    f"hit={hits/len(stream)*100:.0f}%,false={fh}"))
+    lines.append("\n(paper: 37% -> 80% with zero false hits)")
+    return lines, csv
+
+
+# ------------------------------------------------------------ BIRD-like
+
+
+def birdlike_eval():
+    from repro.core import SimulatedLLM
+    from repro.workloads import birdlike
+
+    qs = birdlike.build(150)
+    vocabs = {w: get_workload(w).vocab for w in WORKLOADS}
+    llms = {k: SimulatedLLM(v, model="gpt-4o-mini") for k, v in vocabs.items()}
+    correct = wrong = invalid = 0
+    t0 = time.perf_counter()
+    for q in qs:
+        r = llms[q.schema].canonicalize(q.text, now=None)
+        if r.signature is None:
+            invalid += 1
+        elif r.signature.key() == q.gold.key():
+            correct += 1
+        else:
+            wrong += 1
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(qs)
+    acc = correct / len(qs)
+    lines = ["## BIRD-like human-authored questions (N=150)",
+             f"accuracy {acc*100:.1f}% (correct {correct}, wrong {wrong}, "
+             f"invalid {invalid}; paper: 51.3%)"]
+    return lines, [("birdlike_accuracy", dt_us, f"{acc*100:.1f}%")]

@@ -1,0 +1,33 @@
+"""Production-mesh walkthrough: lower + compile one (arch x shape) cell on
+the 2x16x16 multi-pod mesh and print its memory / cost / collective report —
+the same machinery `python -m repro.launch.dryrun --all` sweeps over all
+64 cells.
+
+    PYTHONPATH=src python examples/multi_pod_dryrun.py [arch] [shape]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-32b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+
+for variant in ("baseline", "kv_seq_shard") if shape == "decode_32k" else ("baseline",):
+    r = run_cell(arch, shape, "multi", variant=variant)
+    m = r["memory"]
+    c = r["collectives"]
+    print(f"\n== {arch} x {shape} x 2x16x16 pods [{variant}] "
+          f"(compiled in {r['compile_s']}s)")
+    print(f"  params            : {r['params_total']/1e9:.1f}B total, "
+          f"{r['params_active']/1e9:.1f}B active")
+    print(f"  per-device memory : args {m['argument_bytes']/1e9:.2f} GB, "
+          f"temp {m['temp_bytes']/1e9:.2f} GB, out {m['output_bytes']/1e9:.2f} GB")
+    print(f"  global FLOPs      : {r['flops_global']:.3e}")
+    print(f"  collectives       : " + ", ".join(
+        f"{k} {v/1e9:.2f} GB" for k, v in sorted(c["bytes_by_kind"].items())))

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's full pipeline in ~40 lines.
+
+Builds the SSB workload (schema + synthetic data), boots the semantic cache
+middleware with the calibrated NL canonicalizer, runs a mixed SQL/NL
+dashboard session, and prints the cache's view of it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,
+                        SemanticCacheMiddleware, SimulatedLLM)
+from repro.olap.executor import OlapExecutor
+from repro.workloads import ssb
+
+wl = ssb.build(n_fact=30_000)
+backend = OlapExecutor(wl.dataset)
+cache = SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper())
+mw = SemanticCacheMiddleware(
+    wl.schema, backend, cache,
+    nl=MemoizedNL(SimulatedLLM(wl.vocab, model="oracle")),
+    policy=SafetyPolicy.balanced(wl.spatial_ambiguous,
+                                 qualified=("customer region", "supplier region")),
+)
+
+requests = [
+    # fine-grain query populates the cache (cold miss)
+    ("sql", "SELECT c_nation, SUM(lo_revenue) AS revenue FROM lineorder "
+            "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+            "JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+            "WHERE d_year = 1994 GROUP BY c_nation"),
+    # same intent, different SQL surface form -> exact hit
+    ("sql", "select SUM(lo_revenue) revenue, c_nation from lineorder "
+            "join dates on dates.d_key = lineorder.lo_orderdate "
+            "join customer on customer.c_key = lineorder.lo_custkey "
+            "where lo_date >= '1994-01-01' and lo_date < '1995-01-01' "
+            "group by c_nation"),
+    # same intent in natural language -> cross-surface exact hit
+    ("nl", "Show total revenue by customer nation in 1994"),
+    # coarser grouping -> answered by roll-up derivation, no backend touch
+    ("sql", "SELECT c_region, SUM(lo_revenue) AS revenue FROM lineorder "
+            "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+            "JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+            "WHERE d_year = 1994 GROUP BY c_region"),
+    # global total -> roll-up to the empty grouping
+    ("nl", "What is total revenue in 1994?"),
+]
+
+for kind, text in requests:
+    r = mw.query_sql(text) if kind == "sql" else mw.query_nl(text)
+    rows = r.table.num_rows if r.table is not None else 0
+    print(f"[{kind:3s}] {r.status:15s} rows={rows:3d}  {text[:60]}...")
+
+s = cache.stats
+print(f"\nhits: exact={s.hits_exact} rollup={s.hits_rollup} "
+      f"cross_surface={s.cross_surface_hits} | misses={s.misses} "
+      f"| backend executions={backend.executions}")

@@ -1,0 +1,75 @@
+"""End-to-end driver: train the ~100M canonicalizer LM on NL->signature pairs
+for a few hundred steps with checkpointing, then serve it with grammar-
+constrained JSON decoding and measure held-out canonicalization accuracy.
+
+Reduced defaults keep a single CPU core busy for a few minutes; pass
+--full for the real 100M config / 300 steps (the production path).
+
+    PYTHONPATH=src python examples/train_canonicalizer.py [--full]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.registry import get, reduced
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.serving.engine import CanonicalizerService, ServingEngine
+from repro.training.data import BatchIterator, build_pairs
+from repro.training.tokenizer import build_tokenizer
+from repro.training.train_lib import TrainConfig, train
+from repro.workloads import ssb
+from repro.workloads.paraphrase import gen_paraphrases
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--steps", type=int, default=None)
+args = ap.parse_args()
+
+wl = ssb.build(n_fact=2000)
+tok = build_tokenizer([wl])
+pairs = build_pairs([wl], paraphrases_per_intent=24)
+print(f"{len(pairs)} training pairs, tokenizer vocab {tok.vocab_size}")
+
+if args.full:
+    cfg = get("canonicalizer-100m")
+    steps = args.steps or 300
+    batch, seq = 16, 192
+else:
+    cfg = dataclasses.replace(reduced("canonicalizer-100m"),
+                              n_layers=4, d_model=256, d_ff=512, vocab=4096,
+                              n_heads=8, kv_heads=4, head_dim=32)
+    steps = args.steps or 120
+    batch, seq = 8, 128
+
+batches = BatchIterator(pairs, tok, batch=batch, seq_len=seq)
+out = train(cfg, TrainConfig(steps=steps, ckpt_dir="ckpts/canonicalizer",
+                             ckpt_every=50, log_every=20),
+            batches, key=jax.random.PRNGKey(0))
+
+# ---- held-out evaluation through the real serving engine
+engine = ServingEngine(cfg, out["params"], tok, max_len=256)
+svc = CanonicalizerService(engine, wl.schema.name)
+canon = SQLCanonicalizer(wl.schema)
+correct = parsed = 0
+held_out = []
+for i, intent in enumerate(wl.intents[:8]):
+    gold = canon.canonicalize(intent.sql)
+    text = gen_paraphrases(intent, n=40, seed=777 + i)[-1]  # unseen template mix
+    held_out.append((text, gold))
+for text, gold in held_out:
+    r = svc.canonicalize(text)
+    parsed += r.signature is not None
+    correct += r.signature is not None and r.signature.key() == gold.key()
+    verdict = ("EXACT" if r.signature is not None and r.signature.key() == gold.key()
+               else ("valid-json" if r.signature else "reject"))
+    print(f"  conf={r.confidence:.2f} {verdict:10s} | {text[:56]}")
+    if verdict == "reject":
+        print(f"      emitted: {r.raw_json[:90]!r}")
+print(f"\nheld-out: {parsed}/{len(held_out)} parseable signatures, "
+      f"{correct}/{len(held_out)} exact intent matches "
+      f"(training longer / --full improves this; the safety layer gates the rest)")

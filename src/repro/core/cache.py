@@ -1,0 +1,281 @@
+"""The semantic cache store (§3.5, §3.6, §6.2).
+
+Exact-intent lookup by signature hash, plus correctness-preserving
+derivations (roll-up, filter-down) found through a metadata index keyed by
+measure multiset — the in-memory analogue of the paper's SQLite derivation
+index (entries matching requested measures with superset dimensions or
+superset filters).  LRU eviction; snapshot-based invalidation where entries
+whose time window intersects updated partitions (or is open-ended) are
+refreshed while closed windows remain valid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Optional
+
+from . import derivations as dv
+from .schema import StarSchema
+from .signature import Signature
+from .table import ResultTable
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    signature: Signature
+    table: ResultTable
+    origin: str  # 'sql' | 'nl'
+    snapshot_id: str
+    stored_at: float
+    hits: int = 0
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits_exact: int = 0
+    hits_rollup: int = 0
+    hits_filterdown: int = 0
+    hits_compose: int = 0
+    misses: int = 0
+    stores: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+    cross_surface_hits: int = 0  # NL request served by SQL-seeded entry or v.v.
+    nl_hits: int = 0
+
+    def hits(self) -> int:
+        return (self.hits_exact + self.hits_rollup + self.hits_filterdown
+                + self.hits_compose)
+
+    def lookups(self) -> int:
+        return self.hits() + self.misses
+
+    def hit_rate(self) -> float:
+        n = self.lookups()
+        return self.hits() / n if n else 0.0
+
+
+@dataclasses.dataclass
+class LookupResult:
+    status: str  # 'hit_exact' | 'hit_rollup' | 'hit_filterdown' | 'miss'
+    table: Optional[ResultTable]
+    source_key: Optional[str] = None
+    source_origin: Optional[str] = None
+
+
+class SemanticCache:
+    def __init__(
+        self,
+        schema: StarSchema,
+        capacity: Optional[int] = None,  # max entries; None = unbounded
+        enable_rollup: bool = True,
+        enable_filterdown: bool = True,
+        enable_compose: bool = False,  # beyond-paper: filter-down o roll-up
+        level_mapper: Optional[dv.LevelMapper] = None,
+    ):
+        self.schema = schema
+        self.capacity = capacity
+        self.enable_rollup = enable_rollup
+        self.enable_filterdown = enable_filterdown
+        self.enable_compose = enable_compose
+        self.level_mapper = level_mapper
+        self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
+        # derivation candidate index: (scope, measure multiset) -> keys
+        self._by_measures: dict[tuple, list[str]] = {}
+        self.stats = CacheStats()
+
+    # ------------------------------------------------------------------- api
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, sig: Signature, request_origin: str = "sql") -> LookupResult:
+        key = sig.key()
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._touch(key, entry, request_origin)
+            self.stats.hits_exact += 1
+            return LookupResult("hit_exact", entry.table, key, entry.origin)
+
+        # derivation pass over candidates sharing the measure multiset,
+        # most-recently-used first
+        idx_key = (sig.scope, sig.schema, sig.measure_key())
+        for cand_key in reversed(self._by_measures.get(idx_key, ())):
+            cand = self._entries.get(cand_key)
+            if cand is None:
+                continue
+            if self.enable_rollup:
+                plan = dv.plan_rollup(sig, cand.signature, self.schema, cand_key)
+                if plan is not None:
+                    derived = dv.apply_rollup(
+                        plan, sig, cand.signature, cand.table, self.level_mapper
+                    )
+                    if derived is not None:
+                        self._touch(cand_key, cand, request_origin)
+                        self.stats.hits_rollup += 1
+                        return LookupResult("hit_rollup", derived, cand_key, cand.origin)
+            if self.enable_filterdown:
+                plan = dv.plan_filterdown(sig, cand.signature, self.schema, cand_key)
+                if plan is not None:
+                    derived = dv.apply_filterdown(plan, sig, cand.signature, cand.table)
+                    self._touch(cand_key, cand, request_origin)
+                    self.stats.hits_filterdown += 1
+                    return LookupResult("hit_filterdown", derived, cand_key, cand.origin)
+            if self.enable_compose:
+                plan = dv.plan_compose(sig, cand.signature, self.schema, cand_key)
+                if plan is not None:
+                    derived = dv.apply_compose(
+                        plan, sig, cand.signature, cand.table, self.level_mapper)
+                    if derived is not None:
+                        self._touch(cand_key, cand, request_origin)
+                        self.stats.hits_compose += 1
+                        return LookupResult("hit_compose", derived, cand_key, cand.origin)
+        self.stats.misses += 1
+        return LookupResult("miss", None)
+
+    def put(
+        self,
+        sig: Signature,
+        table: ResultTable,
+        origin: str = "sql",
+        snapshot_id: str = "snap0",
+    ) -> str:
+        key = sig.key()
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self._entries[key].table = table
+            self._entries[key].snapshot_id = snapshot_id
+            return key
+        self._entries[key] = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
+        self._by_measures.setdefault(
+            (sig.scope, sig.schema, sig.measure_key()), []
+        ).append(key)
+        self.stats.stores += 1
+        while self.capacity is not None and len(self._entries) > self.capacity:
+            self._evict_lru()
+        return key
+
+    # ---------------------------------------------------------- invalidation
+    def invalidate_snapshot(
+        self, updated_start: Optional[str] = None, updated_end: Optional[str] = None
+    ) -> int:
+        """New data arrived covering [updated_start, updated_end).  Entries
+        with open-ended windows, no window at all (they span everything), or a
+        window intersecting the updated partition are dropped; closed windows
+        outside the range remain valid (§6.2)."""
+        dropped = []
+        for key, e in self._entries.items():
+            tw = e.signature.time_window
+            if tw is None or tw.open_ended:
+                dropped.append(key)
+            elif updated_start is not None and updated_end is not None:
+                if tw.intersects(updated_start, updated_end):
+                    dropped.append(key)
+            else:  # unknown update extent: conservative — drop everything
+                dropped.append(key)
+        for key in dropped:
+            self._remove(key)
+            self.stats.invalidations += 1
+        return len(dropped)
+
+    def invalidate_schema_change(self) -> int:
+        n = len(self._entries)
+        self._entries.clear()
+        self._by_measures.clear()
+        self.stats.invalidations += n
+        return n
+
+    # ------------------------------------------------------------- internals
+    def _touch(self, key: str, entry: CacheEntry, request_origin: str) -> None:
+        self._entries.move_to_end(key)
+        entry.hits += 1
+        if request_origin == "nl":
+            self.stats.nl_hits += 1
+        if request_origin != entry.origin:
+            self.stats.cross_surface_hits += 1
+
+    def _evict_lru(self) -> None:
+        key, _ = self._entries.popitem(last=False)
+        self._unindex(key)
+        self.stats.evictions += 1
+
+    def _remove(self, key: str) -> None:
+        if key in self._entries:
+            del self._entries[key]
+            self._unindex(key)
+
+    def _unindex(self, key: str) -> None:
+        for keys in self._by_measures.values():
+            if key in keys:
+                keys.remove(key)
+                break
+
+    # ---------------------------------------------------------- introspection
+    def entry(self, key: str) -> Optional[CacheEntry]:
+        return self._entries.get(key)
+
+    def keys(self) -> list[str]:
+        return list(self._entries.keys())
+
+    def total_bytes(self) -> int:
+        return sum(e.table.nbytes() for e in self._entries.values())
+
+
+# ------------------------------------------------------------- persistence
+
+
+def save_cache(cache: SemanticCache, path: str) -> int:
+    """Spill the cache to disk (the paper's Parquet/SQLite store analogue):
+    one .npz per entry + a JSON manifest of signatures/origins/snapshots.
+    Returns the number of entries written."""
+    import json as _json
+    import os
+
+    import numpy as np
+
+    os.makedirs(path, exist_ok=True)
+    manifest = []
+    for i, (key, e) in enumerate(cache._entries.items()):
+        fname = f"entry_{i:06d}.npz"
+        np.savez(os.path.join(path, fname),
+                 **{n: v for n, v in e.table.columns.items()})
+        manifest.append({
+            "key": key, "file": fname, "origin": e.origin,
+            "snapshot_id": e.snapshot_id, "hits": e.hits,
+            "signature": e.signature.to_json(),
+            "columns": e.table.names,
+        })
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        _json.dump(manifest, f, default=str)
+    return len(manifest)
+
+
+def load_cache(cache: SemanticCache, path: str) -> int:
+    """Warm a cache from a spill directory; entries re-validate their key
+    against the recomputed signature hash (tamper/versioning guard)."""
+    import json as _json
+    import os
+
+    import numpy as np
+
+    from .signature import signature_from_json
+    from .table import ResultTable
+
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        return 0
+    with open(mpath) as f:
+        manifest = _json.load(f)
+    loaded = 0
+    for m in manifest:
+        try:
+            sig = signature_from_json(m["signature"])
+        except (KeyError, ValueError):
+            continue
+        if sig.key() != m["key"]:
+            continue  # schema/version drift: refuse stale entries
+        data = np.load(os.path.join(path, m["file"]), allow_pickle=False)
+        table = ResultTable({n: data[n] for n in m["columns"]})
+        cache.put(sig, table, origin=m["origin"], snapshot_id=m["snapshot_id"])
+        loaded += 1
+    return loaded

@@ -1,0 +1,176 @@
+"""The semantic caching middleware — end-to-end request path (§3.2).
+
+For each request: (1) canonicalize into an intent signature, (2) validate
+against schema and safety rules, (3) look up the signature hash in the cache
+(exact, then roll-up / filter-down derivations), (4) on a miss execute on the
+backend and store the result under the signature.  Validation failures bypass
+the cache and execute directly — the system never returns incorrect results
+for unsupported patterns.  Every decision is auditable via the returned
+:class:`Response`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime as _dt
+import time
+from typing import Optional, Protocol
+
+from .cache import LookupResult, SemanticCache
+from .nl_canon import NLCanonicalizer, NLResult
+from .safety import SafetyPolicy, gate_nl, verify_hit_time_window
+from .schema import StarSchema
+from .signature import Signature
+from .sql_canon import CanonicalizationError, SQLCanonicalizer
+from .sqlparse import SQLSyntaxError, UnsupportedQuery
+from .table import ResultTable
+from .validator import SignatureValidator
+
+
+class Backend(Protocol):
+    """Any engine that can execute an intent signature (paper: DuckDB; here:
+    the JAX columnar executor, or raw SQL for out-of-scope bypasses)."""
+
+    def execute(self, sig: Signature) -> ResultTable: ...
+
+    def execute_raw(self, sql: str) -> Optional[ResultTable]: ...
+
+
+@dataclasses.dataclass
+class Response:
+    status: str  # 'hit_exact' | 'hit_rollup' | 'hit_filterdown' | 'miss' | 'bypass'
+    table: Optional[ResultTable]
+    signature: Optional[Signature]
+    origin: str  # 'sql' | 'nl'
+    bypass_reason: Optional[str] = None
+    confidence: Optional[float] = None
+    lookup_ms: float = 0.0
+    backend_ms: float = 0.0
+    canon_ms: float = 0.0
+    source_origin: Optional[str] = None  # origin of the serving cache entry
+
+    @property
+    def hit(self) -> bool:
+        return self.status.startswith("hit")
+
+
+@dataclasses.dataclass
+class MiddlewareStats:
+    bypasses: int = 0
+    nl_gated: int = 0
+    backend_executions: int = 0
+
+
+class SemanticCacheMiddleware:
+    def __init__(
+        self,
+        schema: StarSchema,
+        backend: Backend,
+        cache: SemanticCache,
+        nl: Optional[NLCanonicalizer] = None,
+        policy: SafetyPolicy = SafetyPolicy(),
+        snapshot_id: str = "snap0",
+    ):
+        self.schema = schema
+        self.backend = backend
+        self.cache = cache
+        self.nl = nl
+        self.policy = policy
+        self.snapshot_id = snapshot_id
+        self.sql_canon = SQLCanonicalizer(schema)
+        self.validator = SignatureValidator(schema)
+        self.stats = MiddlewareStats()
+
+    # ------------------------------------------------------------------ SQL
+    def query_sql(self, sql: str, scope: Optional[str] = None) -> Response:
+        t0 = time.perf_counter()
+        try:
+            sig = self.sql_canon.canonicalize(sql, scope=scope)
+        except (UnsupportedQuery, SQLSyntaxError, CanonicalizationError) as e:
+            return self._bypass(sql, "sql", str(e), t0)
+        canon_ms = (time.perf_counter() - t0) * 1e3
+        v = self.validator.validate(sig)
+        if not v:
+            return self._bypass(sql, "sql", "; ".join(v.reasons), t0, sig)
+        return self._serve(sig, "sql", canon_ms, store=True)
+
+    # ------------------------------------------------------------------- NL
+    def query_nl(self, text: str, now: Optional[_dt.date] = None,
+                 scope: Optional[str] = None) -> Response:
+        if self.nl is None:
+            return Response("bypass", None, None, "nl", "no NL canonicalizer configured")
+        t0 = time.perf_counter()
+        res: NLResult = self.nl.canonicalize(text, now)
+        canon_ms = (time.perf_counter() - t0) * 1e3
+        sig = res.signature
+        if sig is not None and scope is not None:
+            sig = sig.replace(scope=scope)
+        if sig is None:
+            self.stats.nl_gated += 1
+            return self._nl_bypass(text, res, res.error or "canonicalization failed", canon_ms)
+        v = self.validator.validate(sig)
+        if not v:
+            self.stats.nl_gated += 1
+            return self._nl_bypass(text, res, "; ".join(v.reasons), canon_ms)
+        gate = gate_nl(self.policy, text, res, now)
+        if not gate:
+            self.stats.nl_gated += 1
+            return self._nl_bypass(text, res, "; ".join(gate.reasons), canon_ms)
+        store = not self.policy.sql_seeded_only
+        return self._serve(sig, "nl", canon_ms, store=store, confidence=res.confidence)
+
+    # -------------------------------------------------------------- serving
+    def _serve(self, sig: Signature, origin: str, canon_ms: float,
+               store: bool, confidence: Optional[float] = None) -> Response:
+        t0 = time.perf_counter()
+        lr: LookupResult = self.cache.lookup(sig, request_origin=origin)
+        lookup_ms = (time.perf_counter() - t0) * 1e3
+        if lr.status != "miss":
+            if (
+                origin == "nl"
+                and self.policy.verify_time_window
+                and lr.source_key is not None
+            ):
+                src = self.cache.entry(lr.source_key)
+                if src is not None and not verify_hit_time_window(sig, src.signature):
+                    lr = LookupResult("miss", None)  # fail safe: treat as miss
+            if lr.status != "miss":
+                return Response(lr.status, lr.table, sig, origin,
+                                confidence=confidence, lookup_ms=lookup_ms,
+                                canon_ms=canon_ms, source_origin=lr.source_origin)
+        t1 = time.perf_counter()
+        table = self.backend.execute(sig)
+        backend_ms = (time.perf_counter() - t1) * 1e3
+        self.stats.backend_executions += 1
+        if store:
+            self.cache.put(sig, table, origin=origin, snapshot_id=self.snapshot_id)
+        return Response("miss", table, sig, origin, confidence=confidence,
+                        lookup_ms=lookup_ms, backend_ms=backend_ms, canon_ms=canon_ms)
+
+    # -------------------------------------------------------------- bypass
+    def _bypass(self, sql: str, origin: str, reason: str, t0: float,
+                sig: Optional[Signature] = None) -> Response:
+        self.stats.bypasses += 1
+        t1 = time.perf_counter()
+        table = self.backend.execute_raw(sql)
+        backend_ms = (time.perf_counter() - t1) * 1e3
+        self.stats.backend_executions += 1
+        return Response("bypass", table, sig, origin, bypass_reason=reason,
+                        backend_ms=backend_ms,
+                        canon_ms=(t1 - t0) * 1e3)
+
+    def _nl_bypass(self, text: str, res: NLResult, reason: str, canon_ms: float) -> Response:
+        """NL requests that fail validation/safety run on the backend *only*
+        when a well-formed signature exists; they are never stored unless the
+        executed signature is well-formed and the policy allows it (§3.5)."""
+        self.stats.bypasses += 1
+        sig = res.signature
+        table = None
+        backend_ms = 0.0
+        if sig is not None and self.validator.validate(sig):
+            t1 = time.perf_counter()
+            table = self.backend.execute(sig)
+            backend_ms = (time.perf_counter() - t1) * 1e3
+            self.stats.backend_executions += 1
+        return Response("bypass", table, sig, "nl", bypass_reason=reason,
+                        confidence=res.confidence, backend_ms=backend_ms,
+                        canon_ms=canon_ms)

@@ -1,0 +1,426 @@
+"""SQL -> OLAP Intent Signature canonicalization (§3.4, SQL path).
+
+Deterministic AST normalization: identifier resolution against the star
+schema, commutative predicate/operand ordering, literal canonicalization,
+and time-window extraction.  Identical signatures imply identical semantics
+under the §3.1 schema conditions.
+
+Raises:
+    sqlparse.UnsupportedQuery  — valid SQL outside the subset (cache bypass)
+    sqlparse.SQLSyntaxError    — malformed SQL (cache bypass)
+    CanonicalizationError      — schema-invalid references (cache bypass)
+"""
+from __future__ import annotations
+
+import datetime as _dt
+import re
+from typing import Optional
+
+from . import sqlparse as sp
+from .schema import AmbiguousColumn, StarSchema, UnknownColumn
+from .signature import (
+    Filter,
+    HavingClause,
+    Measure,
+    OrderKey,
+    Signature,
+    TimeWindow,
+)
+
+
+class CanonicalizationError(Exception):
+    """Schema-invalid SQL (unknown/ambiguous identifiers, bad joins)."""
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def _next_day(iso: str) -> str:
+    return (_dt.date.fromisoformat(iso) + _dt.timedelta(days=1)).isoformat()
+
+
+def _month_window(year: int, month: int) -> tuple[str, str]:
+    start = _dt.date(year, month, 1)
+    end = _dt.date(year + (month == 12), month % 12 + 1, 1)
+    return start.isoformat(), end.isoformat()
+
+
+def _year_window(year: int) -> tuple[str, str]:
+    return f"{year:04d}-01-01", f"{year + 1:04d}-01-01"
+
+
+def _quarter_window(year: int, q: int) -> tuple[str, str]:
+    sm = 3 * (q - 1) + 1
+    start = _dt.date(year, sm, 1)
+    if q == 4:
+        end = _dt.date(year + 1, 1, 1)
+    else:
+        end = _dt.date(year, sm + 3, 1)
+    return start.isoformat(), end.isoformat()
+
+
+_MONTH_NAMES = {
+    m.lower(): i + 1
+    for i, m in enumerate(
+        ["Jan", "Feb", "Mar", "Apr", "May", "Jun", "Jul", "Aug", "Sep", "Oct", "Nov", "Dec"]
+    )
+}
+
+
+def _kind_window(kind: str, val) -> Optional[tuple[str, str]]:
+    """Window for a single time-level equality value, per declared kind."""
+    try:
+        if kind == "year":
+            return _year_window(int(val))
+        if kind == "yearmonthnum":  # e.g. 199702
+            v = int(val)
+            return _month_window(v // 100, v % 100)
+        if kind == "yearmonth_str":  # e.g. 'Mar1994'
+            m = re.fullmatch(r"([A-Za-z]{3})\s?(\d{4})", str(val).strip())
+            if not m or m.group(1).lower() not in _MONTH_NAMES:
+                return None
+            return _month_window(int(m.group(2)), _MONTH_NAMES[m.group(1).lower()])
+        if kind == "yearquarter_str":  # e.g. '1997Q1'
+            m = re.fullmatch(r"(\d{4})\s?Q([1-4])", str(val).strip(), re.IGNORECASE)
+            if not m:
+                return None
+            return _quarter_window(int(m.group(1)), int(m.group(2)))
+        if kind == "date":
+            d = _dt.date.fromisoformat(str(val).strip())
+            return d.isoformat(), _next_day(d.isoformat())
+    except (ValueError, TypeError):
+        return None
+    return None
+
+
+class _WindowAccum:
+    """Intersects time-range constraints into one [start, end) window."""
+
+    def __init__(self):
+        self.start: Optional[str] = None
+        self.end: Optional[str] = None
+
+    def add(self, start: Optional[str], end: Optional[str]) -> None:
+        if start is not None and (self.start is None or start > self.start):
+            self.start = start
+        if end is not None and (self.end is None or end < self.end):
+            self.end = end
+
+    def window(self) -> Optional[TimeWindow]:
+        if self.start is None and self.end is None:
+            return None
+        if self.start is None or self.end is None:
+            raise CanonicalizationError(
+                "time window does not resolve to concrete [start, end) boundaries"
+            )
+        if self.end < self.start:
+            # an empty window is concrete but selects nothing; normalize
+            self.end = self.start
+        return TimeWindow(self.start, self.end)
+
+
+# ------------------------------------------------------------- canonicalizer
+
+
+class SQLCanonicalizer:
+    def __init__(self, schema: StarSchema):
+        self.schema = schema
+
+    # -- public entry
+    def canonicalize(self, sql: str, scope: Optional[str] = None) -> Signature:
+        q = sp.parse(sql)
+        return self.from_ast(q, scope=scope)
+
+    def from_ast(self, q: sp.Query, scope: Optional[str] = None) -> Signature:
+        sch = self.schema
+        # ---- table/alias resolution.  FROM must be the fact table; each JOIN
+        # must follow a schema-declared FK->PK path to a distinct dimension.
+        if q.table != sch.fact.name:
+            raise CanonicalizationError(
+                f"FROM {q.table!r} is not the fact table {sch.fact.name!r}"
+            )
+        alias_to_table: dict[str, str] = {q.alias: sch.fact.name}
+        joined_dims: set[str] = set()
+        for j in q.joins:
+            dim = sch.dimension(j.table)
+            if dim is None:
+                if j.table == sch.fact.name:
+                    raise sp.UnsupportedQuery("self-joins are outside the OLAP subset")
+                raise CanonicalizationError(f"JOIN target {j.table!r} is not a dimension")
+            if dim.name in joined_dims:
+                raise sp.UnsupportedQuery(
+                    f"dimension {dim.name!r} joined twice (role-playing) — bypass"
+                )
+            if j.alias in alias_to_table:
+                raise CanonicalizationError(f"duplicate alias {j.alias!r}")
+            # normalize ON order: fact.fk = dim.pk
+            l_tab = self._table_of(j.left, alias_to_table, extra={j.alias: dim.name})
+            r_tab = self._table_of(j.right, alias_to_table, extra={j.alias: dim.name})
+            pair = {(l_tab, j.left.column), (r_tab, j.right.column)}
+            want = {(sch.fact.name, dim.fact_fk), (dim.name, dim.pk)}
+            if pair != want:
+                raise CanonicalizationError(
+                    f"join condition {pair} does not follow the schema FK path {want}"
+                )
+            alias_to_table[j.alias] = dim.name
+            joined_dims.add(dim.name)
+        self._aliases = alias_to_table
+        self._joined = joined_dims
+
+        # ---- measures and grouping levels from the SELECT list
+        measures: list[Measure] = []
+        alias_to_measure: dict[str, int] = {}
+        expr_to_measure: dict[str, int] = {}
+        select_levels: list[str] = []
+        for item in q.select:
+            if isinstance(item.expr, sp.AggCall):
+                m = self._measure(item.expr)
+                idx = len(measures)
+                measures.append(m)
+                if item.alias:
+                    alias_to_measure[item.alias] = idx
+                expr_to_measure[f"{m.agg}|{m.expr}|{m.distinct}"] = idx
+            elif isinstance(item.expr, sp.ColRef):
+                select_levels.append(self._qualify(item.expr))
+            else:
+                raise sp.UnsupportedQuery(
+                    "non-aggregate SELECT expressions are outside the OLAP subset"
+                )
+        if not measures:
+            raise sp.UnsupportedQuery("queries without aggregation are outside the OLAP subset")
+
+        group_levels = [self._qualify(c) for c in q.group_by]
+        if set(select_levels) - set(group_levels):
+            raise CanonicalizationError(
+                "SELECT columns not covered by GROUP BY: "
+                f"{sorted(set(select_levels) - set(group_levels))}"
+            )
+
+        # ---- filters & time window
+        filters: list[Filter] = []
+        wacc = _WindowAccum()
+        for p in q.where:
+            self._classify_predicate(p, filters, wacc)
+        tw = wacc.window()
+
+        # ---- HAVING over selected measures
+        having: list[HavingClause] = []
+        for p in q.having:
+            having.append(self._having(p, alias_to_measure, expr_to_measure))
+
+        # ---- ORDER BY / LIMIT
+        order: list[OrderKey] = []
+        for expr, desc in q.order_by:
+            if isinstance(expr, sp.AggCall):
+                m = self._measure(expr)
+                k = f"{m.agg}|{m.expr}|{m.distinct}"
+                if k not in expr_to_measure:
+                    raise CanonicalizationError("ORDER BY aggregate not in SELECT")
+                order.append(OrderKey(f"measure:{expr_to_measure[k]}", desc))
+            elif isinstance(expr, sp.ColRef):
+                name = expr.column
+                if expr.table is None and name in alias_to_measure:
+                    order.append(OrderKey(f"measure:{alias_to_measure[name]}", desc))
+                else:
+                    lv = self._qualify(expr)
+                    if lv not in group_levels:
+                        raise CanonicalizationError(f"ORDER BY {lv} not in GROUP BY")
+                    order.append(OrderKey(lv, desc))
+            else:
+                raise sp.UnsupportedQuery("ORDER BY expression outside the OLAP subset")
+        if q.limit is not None and not order:
+            raise sp.UnsupportedQuery("LIMIT without ORDER BY is non-deterministic — bypass")
+
+        return Signature(
+            schema=sch.name,
+            measures=tuple(measures),
+            levels=tuple(group_levels),
+            filters=tuple(filters),
+            time_window=tw,
+            having=tuple(having),
+            order_by=tuple(order),
+            limit=q.limit,
+            scope=scope,
+        )
+
+    # ------------------------------------------------------------ resolution
+    def _table_of(self, c: sp.ColRef, aliases: dict[str, str], extra=None) -> str:
+        look = dict(aliases)
+        if extra:
+            look.update(extra)
+        if c.table is not None:
+            if c.table in look:
+                return look[c.table]
+            if c.table in self.schema.tables():
+                return c.table
+            raise CanonicalizationError(f"unknown table/alias {c.table!r}")
+        try:
+            t, _ = self.schema.resolve_column(c.column)
+        except (AmbiguousColumn, UnknownColumn) as e:
+            raise CanonicalizationError(str(e)) from e
+        return t
+
+    def _qualify(self, c: sp.ColRef) -> str:
+        """Resolve a column ref to canonical 'table.column'."""
+        t = self._table_of(c, self._aliases)
+        try:
+            t2, col = self.schema.resolve_column(c.column, table=t)
+        except (AmbiguousColumn, UnknownColumn) as e:
+            raise CanonicalizationError(str(e)) from e
+        if t2 != self.schema.fact.name and t2 not in self._joined:
+            raise CanonicalizationError(
+                f"column {t2}.{col.name} referenced without joining {t2!r}"
+            )
+        return f"{t2}.{col.name}"
+
+    # ----------------------------------------------------------- expressions
+    def _canon_expr(self, e: sp.Expr) -> str:
+        """Canonical expression string: fully-qualified identifiers, sorted
+        operands under commutative ops, canonical literal formats."""
+        if isinstance(e, sp.ColRef):
+            return self._qualify(e)
+        if isinstance(e, sp.Literal):
+            v = e.value
+            if isinstance(v, float) and v == int(v):
+                return str(int(v))
+            return repr(v) if isinstance(v, str) else str(v)
+        if isinstance(e, sp.BinOp):
+            l, r = self._canon_expr(e.left), self._canon_expr(e.right)
+            if e.op in ("+", "*"):
+                # flatten same-op chains and sort operands
+                parts = sorted(self._flatten(e, e.op))
+                return "(" + e.op.join(parts) + ")"
+            return f"({l}{e.op}{r})"
+        raise sp.UnsupportedQuery("aggregate nested inside expression")
+
+    def _flatten(self, e: sp.Expr, op: str) -> list[str]:
+        if isinstance(e, sp.BinOp) and e.op == op:
+            return self._flatten(e.left, op) + self._flatten(e.right, op)
+        return [self._canon_expr(e)]
+
+    def _measure(self, a: sp.AggCall) -> Measure:
+        if a.arg is None:  # COUNT(*)
+            return Measure("COUNT", "*", distinct=False)
+        expr = self._canon_expr(a.arg)
+        if a.distinct and a.func != "COUNT":
+            raise sp.UnsupportedQuery(f"{a.func}(DISTINCT …) is outside the OLAP subset")
+        self._check_measure_types(a)
+        return Measure(a.func, expr, distinct=a.distinct)
+
+    def _check_measure_types(self, a: sp.AggCall) -> None:
+        """Aggregations besides COUNT require numeric arguments."""
+        if a.func == "COUNT":
+            return
+
+        def visit(e: sp.Expr) -> None:
+            if isinstance(e, sp.ColRef):
+                t = self._table_of(e, self._aliases)
+                _, col = self.schema.resolve_column(e.column, table=t)
+                if not col.is_numeric():
+                    raise CanonicalizationError(
+                        f"{a.func} over non-numeric column {t}.{col.name}"
+                    )
+            elif isinstance(e, sp.BinOp):
+                visit(e.left)
+                visit(e.right)
+
+        visit(a.arg)
+
+    # ------------------------------------------------------------ predicates
+    def _classify_predicate(
+        self, p: sp.Predicate, filters: list[Filter], wacc: _WindowAccum
+    ) -> None:
+        left, op, right = p.left, p.op, p.right
+        # normalize literal-on-left comparisons
+        if isinstance(left, sp.Literal) and isinstance(right, sp.ColRef):
+            left, right = right, left
+            op = {"<": ">", ">": "<", "<=": ">=", ">=": "<="}.get(op, op)
+        if not isinstance(left, sp.ColRef):
+            raise sp.UnsupportedQuery("predicate left side must be a column")
+        col = self._qualify(left)
+        tab, cname = col.split(".", 1)
+        kind = self._time_kind(tab, cname)
+        if kind is not None and self._try_time(col, kind, op, right, wacc):
+            return
+        # ordinary filter
+        if op == "between":
+            lo, hi = right
+            filters.append(Filter(col, ">=", lo.value))
+            filters.append(Filter(col, "<=", hi.value))
+            return
+        if op == "in":
+            filters.append(Filter(col, "in", [l.value for l in right]))
+            return
+        if not isinstance(right, sp.Literal):
+            raise sp.UnsupportedQuery("column-to-column predicates are outside the OLAP subset")
+        filters.append(Filter(col, op, right.value))
+
+    def _time_kind(self, tab: str, col: str) -> Optional[str]:
+        if tab == self.schema.fact.name:
+            if col == self.schema.fact.date_column:
+                return "date"
+            return None
+        d = self.schema.dimension(tab)
+        if d is None or tab != self.schema.time_dimension:
+            return None
+        return d.time_kind(col)
+
+    def _try_time(self, col, kind, op, right, wacc: _WindowAccum) -> bool:
+        """Fold a time predicate into the window accumulator.  Returns False
+        when the predicate is time-typed but not range-expressible (it then
+        stays an ordinary filter, which is still exact)."""
+        def one(v):
+            return _kind_window(kind, v)
+
+        if op == "=":
+            if not isinstance(right, sp.Literal):
+                return False
+            w = one(right.value)
+            if w is None:
+                return False
+            wacc.add(*w)
+            return True
+        if op == "between":
+            lo, hi = right
+            wl, wh = one(lo.value), one(hi.value)
+            if wl is None or wh is None:
+                return False
+            wacc.add(wl[0], wh[1])
+            return True
+        if op in ("<", "<=", ">", ">="):
+            if not isinstance(right, sp.Literal):
+                return False
+            w = one(right.value)
+            if w is None:
+                return False
+            start, end = w
+            if op == ">=":
+                wacc.add(start, None)
+            elif op == ">":
+                wacc.add(end, None)
+            elif op == "<":
+                wacc.add(None, start)
+            else:  # <=
+                wacc.add(None, end)
+            return True
+        return False  # 'in' over time levels stays an ordinary filter
+
+    # --------------------------------------------------------------- having
+    def _having(self, p: sp.Predicate, alias_idx, expr_idx) -> HavingClause:
+        left, op, right = p.left, p.op, p.right
+        if op in ("between", "in"):
+            raise sp.UnsupportedQuery("HAVING BETWEEN/IN is outside the OLAP subset")
+        if isinstance(left, sp.Literal) and not isinstance(right, sp.Literal):
+            left, right = right, left
+            op = {"<": ">", ">": "<", "<=": ">=", ">=": "<="}.get(op, op)
+        if not isinstance(right, sp.Literal):
+            raise sp.UnsupportedQuery("HAVING must compare a measure to a literal")
+        if isinstance(left, sp.AggCall):
+            m = self._measure(left)
+            k = f"{m.agg}|{m.expr}|{m.distinct}"
+            if k not in expr_idx:
+                raise CanonicalizationError("HAVING aggregate not in SELECT")
+            return HavingClause(expr_idx[k], op, right.value)
+        if isinstance(left, sp.ColRef) and left.table is None and left.column in alias_idx:
+            return HavingClause(alias_idx[left.column], op, right.value)
+        raise CanonicalizationError("HAVING must reference a selected measure")

@@ -1,0 +1,101 @@
+"""Sharding rules and activation-sharding hints.
+
+Parameter shardings are derived from param-tree paths (Megatron-style TP over
+the 'model' axis, batch over ('pod','data')).  Activation hints are applied
+through a context: layer code calls ``hint(x, 'residual')`` and the launcher
+decides what (if anything) that means on the active mesh — empty context means
+no constraint, so single-device smoke tests trace the same code.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE_HINTS: contextvars.ContextVar[dict] = contextvars.ContextVar(
+    "repro_sharding_hints", default={}
+)
+
+
+@contextlib.contextmanager
+def sharding_hints(hints: dict[str, P]):
+    token = _ACTIVE_HINTS.set(dict(hints))
+    try:
+        yield
+    finally:
+        _ACTIVE_HINTS.reset(token)
+
+
+def hint(x, name: str):
+    """Apply the named activation-sharding constraint if one is active."""
+    spec = _ACTIVE_HINTS.get().get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------- param rules
+
+
+def batch_axes(mesh_axis_names) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+
+
+def param_spec(path: str, shape: tuple, model_size: int, stacked: bool) -> P:
+    """TP sharding rule for one parameter, by its tree path.
+
+    ``stacked``: the leading axis is the scanned layer axis; rules shift by 1.
+    Output-dim sharding applies only when divisible by the model-axis size —
+    small models (e.g. gemma-2b's 8 q-heads) replicate instead, which is the
+    honest cost of narrow models on wide meshes.
+    """
+    off = 1 if stacked else 0
+
+    def dim_ok(i: int) -> bool:
+        return shape[i + off] % model_size == 0
+
+    def spec(*axes) -> P:
+        return P(*([None] * off + list(axes)))
+
+    leaf = path.split("/")[-1]
+    if leaf in ("embed",):
+        return P("model", None) if shape[0] % model_size == 0 else P(None, None)
+    if leaf in ("lm_head",):
+        return P(None, "model") if shape[1] % model_size == 0 else P(None, None)
+    if leaf in ("wq", "wk", "wv", "w1", "w3", "wz", "wx", "in_up"):
+        return spec(None, "model") if dim_ok(1) else spec(None, None)
+    if leaf in ("wo", "w2", "out_proj"):
+        return spec("model", None) if dim_ok(0) else spec(None, None)
+    if leaf in ("moe_w1", "moe_w3"):  # (Es, El, D, F) expert-sharded
+        return spec("model", None, None, None)
+    if leaf in ("moe_w2",):
+        return spec("model", None, None, None)
+    if leaf in ("conv",):  # depthwise conv (K, d_inner)
+        return spec(None, "model") if dim_ok(1) else spec(None, None)
+    # norms, biases, routers, dt/A params: replicated
+    return spec(*([None] * (len(shape) - off)))
+
+
+def tree_param_specs(params_shape, model_size: int, stacked_prefixes=("layers",)):
+    """Build a PartitionSpec pytree parallel to a params shape-tree."""
+
+    def walk(tree, path, stacked):
+        if isinstance(tree, dict):
+            return {
+                k: walk(v, f"{path}/{k}" if path else k,
+                        stacked or k in stacked_prefixes)
+                for k, v in tree.items()
+            }
+        return param_spec(path, tree.shape, model_size, stacked)
+
+    return walk(params_shape, "", False)
+
+
+def named_sharding_tree(spec_tree, mesh) -> object:
+    return jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,14 @@
+"""Dispatching wrapper for KV-cache decode attention."""
+from __future__ import annotations
+
+from ..seg_agg.ops import kernel_impl
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, pos, scale: float | None = None, impl: str | None = None):
+    impl = impl or kernel_impl()
+    if impl == "xla":
+        return decode_attention_ref(q, k, v, pos, scale=scale)
+    return decode_attention_pallas(q, k, v, pos, scale=scale,
+                                   interpret=(impl == "interpret"))

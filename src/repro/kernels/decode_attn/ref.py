@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: single-token GQA attention over a KV cache.
+
+Written in GQA-grouped form — (B, Hkv, G, Dh) query against (B, Hkv, S, Dh)
+cache — with no materialized head ``repeat`` and no f32 copy of the cache:
+f32 happens in the dot accumulator (``preferred_element_type``).  This
+matters under SPMD: the naive repeat+astype forces XLA to materialize (and,
+when kv_heads < model shards, all-gather) a full-precision copy of the whole
+cache; the grouped form keeps the cache read in place and shards cleanly
+over the sequence axis (flash-decode style), with only softmax statistics
+crossing shards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, scale: float | None = None):
+    """q: (B, H, Dh); k, v: (B, Hkv, S, Dh); pos: (B,) valid cache lengths.
+
+    Attends to cache positions [0, pos_b) per batch row.  Returns (B, H, Dh).
+    """
+    b, h, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, dh).astype(q.dtype)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32)  # (B, Hkv, G, S)
+    mask = jnp.arange(s)[None, None, None, :] < pos[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bksd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, dh).astype(q.dtype)

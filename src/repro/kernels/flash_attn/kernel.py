@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: causal flash attention (blockwise online softmax).
+
+Tiling for the TPU memory hierarchy: Q tiles of (TQ, Dh) stay VMEM-resident
+while K/V tiles of (TK, Dh) stream HBM->VMEM; the (TQ, TK) logits tile feeds
+the MXU; the online-softmax running max/denominator live in VREGs/VMEM
+scratch.  Causality is exploited structurally: K tiles strictly above the
+diagonal are skipped via ``pl.when`` on the grid index, halving the work — the
+TPU equivalent of the CUDA early-exit.
+
+Grid: (B*Hq, Sq/TQ, Skv/TK) — KV minor so each Q tile accumulates in place.
+GQA is handled by the index_map: q head h reads kv head h // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TQ = 512
+DEFAULT_TK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, tq: int, tk: int, kv_len: int):
+    kb = pl.program_id(2)
+    qb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal structural skip: this K tile is entirely in the future
+    run = (not causal) or (kb * tk <= qb * tq + tq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (TQ, Dh)
+        k = k_ref[0].astype(jnp.float32)  # (TK, Dh)
+        v = v_ref[0].astype(jnp.float32)  # (TK, Dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (TQ, TK)
+        cols = kb * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)  # mask padded keys
+        if causal:
+            rows = qb * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]  # (TQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (TQ, TK)
+        alpha = jnp.exp(m_prev - m_new)  # (TQ, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "tq", "tk", "interpret"),
+)
+def flash_attention_pallas(q, k, v, causal: bool = True, scale: float | None = None,
+                           tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                           interpret: bool = False):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh) -> (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    tq = min(tq, s)
+    tk = min(tk, s)
+    if s % tq or s % tk:  # pad sequence to tile multiple
+        pad = (-s) % max(tq, tk)
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        out = _flash_padded(q, k, v, causal, scale, tq, tk, interpret, kv_len=s)
+        return out[:, :, :s]
+    return _flash_padded(q, k, v, causal, scale, tq, tk, interpret, kv_len=s)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "tq", "tk", "interpret", "kv_len"),
+)
+def _flash_padded(q, k, v, causal, scale, tq, tk, interpret, kv_len):
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    qr = q.reshape(b * h, s, dh)
+    kr = k.reshape(b * hkv, s, dh)
+    vr = v.reshape(b * hkv, s, dh)
+    grid = (b * h, s // tq, s // tk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal, tq=tq, tk=tk,
+                          kv_len=kv_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, tk, dh), lambda bh, qb, kb, g=group, hh=h, hk=hkv:
+                         ((bh // hh) * hk + (bh % hh) // g, kb, 0)),
+            pl.BlockSpec((1, tk, dh), lambda bh, qb, kb, g=group, hh=h, hk=hkv:
+                         ((bh // hh) * hk + (bh % hh) // g, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), q.dtype),
+        scratch_shapes=[
+            _vmem((tq, 1)),  # running max
+            _vmem((tq, 1)),  # running denominator
+            _vmem((tq, dh)),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, dh)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for causal GQA attention (see seg_agg/ops.py for the
+REPRO_KERNELS convention)."""
+from __future__ import annotations
+
+from ..seg_agg.ops import kernel_impl
+from .kernel import flash_attention_pallas
+from .ref import mha_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    impl: str | None = None):
+    impl = impl or kernel_impl()
+    if impl == "xla":
+        return mha_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, interpret=(impl == "interpret")
+    )

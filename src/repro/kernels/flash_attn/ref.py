@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: causal GQA attention (prefill/training path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, H, S, Dh); k, v: (B, Hkv, S, Dh) with H % Hkv == 0.
+
+    Returns (B, H, S, Dh).  float32 accumulation, bf16-friendly inputs.
+    """
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to q heads
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)

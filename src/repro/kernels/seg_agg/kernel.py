@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: grouped aggregation as a one-hot MXU matmul.
+
+GPU engines do group-by aggregation with hash tables + atomic scatter-adds.
+TPU has no fast scatter, so we restructure for the memory hierarchy and the
+systolic MXU: stream (TN, M) value tiles HBM->VMEM, build a (TN, TG) one-hot
+of group ids *in VMEM*, and accumulate partial aggregates with
+``one_hot.T @ values`` on the MXU.  The output tile (TG, M) stays resident in
+VMEM across the whole N sweep (grid minor axis) and is written back once per
+group tile.
+
+Arithmetic intensity: the matmul spends 2·G flops per loaded value vs a 4-byte
+HBM read, so the kernel stays memory-bound (the roofline optimum for a
+reduction) for G up to ~800 groups per tile at v5e ratios — exactly the
+dashboard regime (grouping cardinalities of tens to hundreds).  MIN/MAX use a
+masked select-and-reduce on the VPU instead of the matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TN = 1024  # fact rows per tile
+DEFAULT_TG = 512  # groups per tile; one-hot tile = TN*TG*4B = 2 MiB VMEM
+
+
+def _seg_agg_kernel(values_ref, ids_ref, mask_ref, out_ref, *, op: str, tg: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        if op == "sum":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif op == "min":
+            out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, -jnp.inf)
+
+    gb = pl.program_id(0)
+    values = values_ref[...]  # (TN, M) f32
+    ids = ids_ref[...][:, 0]  # (TN,)
+    mask = mask_ref[...][:, 0] > 0.5  # (TN,)
+    tn = values.shape[0]
+    local = ids - gb * tg
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (tn, tg), 1)) & mask[:, None]
+    if op == "sum":
+        oh = onehot.astype(jnp.float32)
+        out_ref[...] += jax.lax.dot_general(
+            oh, values, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (TG, M)
+    else:
+        ident = jnp.inf if op == "min" else -jnp.inf
+        m = values.shape[1]
+        # VPU path: per-measure masked reduce over the row axis
+        for j in range(m):
+            vj = jnp.where(onehot, values[:, j][:, None], ident)  # (TN, TG)
+            red = jnp.min(vj, axis=0) if op == "min" else jnp.max(vj, axis=0)
+            cur = out_ref[:, j]
+            out_ref[:, j] = jnp.minimum(cur, red) if op == "min" else jnp.maximum(cur, red)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "op", "tn", "tg", "interpret"))
+def seg_agg_pallas(
+    values,
+    ids,
+    mask,
+    num_groups: int,
+    op: str = "sum",
+    tn: int = DEFAULT_TN,
+    tg: int = DEFAULT_TG,
+    interpret: bool = False,
+):
+    """values (N, M) f32, ids (N,) int32, mask (N,) -> (num_groups, M) f32."""
+    n, m = values.shape
+    values = jnp.asarray(values, jnp.float32)
+    ids = jnp.asarray(ids, jnp.int32)
+    mask = jnp.asarray(mask, jnp.float32)
+    tn = min(tn, max(8, n))
+    tg = min(tg, max(8, num_groups))
+    n_pad = (-n) % tn
+    g_pad = (-num_groups) % tg
+    if n_pad:
+        values = jnp.pad(values, ((0, n_pad), (0, 0)))
+        ids = jnp.pad(ids, (0, n_pad))
+        mask = jnp.pad(mask, (0, n_pad))
+    gp = num_groups + g_pad
+    grid = (gp // tg, (n + n_pad) // tn)
+    out = pl.pallas_call(
+        functools.partial(_seg_agg_kernel, op=op, tg=tg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, m), lambda gb, nb: (nb, 0)),
+            pl.BlockSpec((tn, 1), lambda gb, nb: (nb, 0)),
+            pl.BlockSpec((tn, 1), lambda gb, nb: (nb, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, m), lambda gb, nb: (gb, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, m), jnp.float32),
+        interpret=interpret,
+    )(values, ids[:, None], mask[:, None])
+    return out[:num_groups]

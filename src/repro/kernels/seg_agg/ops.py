@@ -1,0 +1,37 @@
+"""Dispatching wrapper for grouped aggregation.
+
+Implementation selection (shared convention for all kernels in this repo):
+
+* ``REPRO_KERNELS=pallas``     — compiled Pallas (TPU),
+* ``REPRO_KERNELS=interpret``  — Pallas interpret mode (CPU correctness),
+* ``REPRO_KERNELS=xla``        — pure-jnp reference (XLA lowering),
+* unset                        — pallas on TPU, xla elsewhere.
+
+The multi-pod dry-run lowers the XLA path; kernels are validated against
+ref.py in interpret mode by the test suite.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .kernel import seg_agg_pallas
+from .ref import seg_agg_ref
+
+
+def kernel_impl() -> str:
+    env = os.environ.get("REPRO_KERNELS", "").lower()
+    if env in ("pallas", "interpret", "xla"):
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def seg_agg(values, ids, mask, num_groups: int, op: str = "sum", impl: str | None = None):
+    """Grouped aggregation: (N, M) values + (N,) ids -> (num_groups, M)."""
+    impl = impl or kernel_impl()
+    if impl == "xla":
+        return seg_agg_ref(values, ids, mask, num_groups, op)
+    return seg_agg_pallas(
+        values, ids, mask, num_groups, op, interpret=(impl == "interpret")
+    )

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for grouped aggregation (segment reduce)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IDENTITY = {"sum": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+def seg_agg_ref(values, ids, mask, num_groups: int, op: str = "sum"):
+    """Grouped aggregation oracle.
+
+    values: (N, M) float; ids: (N,) int32 group ids in [0, num_groups);
+    mask: (N,) {0,1} row validity.  Returns (num_groups, M).  Empty groups
+    hold the op identity (0 / +inf / -inf); callers use a COUNT column to
+    drop them, matching SQL semantics where empty groups are absent.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    if op == "sum":
+        return jax.ops.segment_sum(values * mask[:, None], ids, num_segments=num_groups)
+    if op == "min":
+        v = jnp.where(mask[:, None] > 0.5, values, jnp.inf)
+        return jax.ops.segment_min(v, ids, num_segments=num_groups)
+    if op == "max":
+        v = jnp.where(mask[:, None] > 0.5, values, -jnp.inf)
+        return jax.ops.segment_max(v, ids, num_segments=num_groups)
+    raise ValueError(f"unknown op {op!r}")

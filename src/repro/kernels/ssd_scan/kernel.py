@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: chunked Mamba2 SSD scan (state-space duality).
+
+The SSD insight: within a chunk of L timesteps the recurrence collapses to
+dense matmuls (an attention-like (L, L) masked product on the MXU) while the
+O(S) part reduces to a once-per-chunk state update.  We map it to TPU as:
+
+  grid = (B*H, S/L), chunk index minor — the (P, N) head state lives in VMEM
+  scratch and is carried *sequentially across grid steps*, so the whole scan
+  is one kernel launch with no HBM state traffic between chunks.
+
+Per chunk (all in fp32 on MXU/VPU):
+  cum_t   = cumsum(A * dt)                      (decay exponents)
+  y_intra = ((C B^T) * M) x        with  M[t,s] = exp(cum_t - cum_s)·dt_s·1[s<=t]
+  y_inter = (C @ state) * exp(cum)
+  state  <- exp(cum_L) * state + (B * dt * exp(cum_L - cum))^T x
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                *, chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)  # (L, 1)
+    a = a_ref[0, 0]  # scalar decay rate for this head
+    bm = b_ref[0].astype(jnp.float32)  # (L, N)
+    cm = c_ref[0].astype(jnp.float32)  # (L, N)
+
+    adt = a * dt  # (L, 1), negative
+    cum = jnp.cumsum(adt, axis=0)  # inclusive cumsum (L, 1)
+
+    # intra-chunk: masked decay attention on the MXU
+    g = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cum - cum.T)  # exp(cum_t - cum_s)
+    m = jnp.where(rows >= cols, decay * dt.T, 0.0)  # (L, L)
+    y = jax.lax.dot_general(g * m, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]  # (N, P)
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        cm, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # state update for the next chunk
+    total = jnp.exp(cum[-1, 0])
+    w = bm * (dt * jnp.exp(cum[-1:] - cum))  # (L, N) weights
+    state_ref[...] = total * state + jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int = DEFAULT_CHUNK,
+                    interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N) -> y: (B,S,H,P).
+
+    S must not be tiny; it is padded to a chunk multiple (dt=0 padding is a
+    no-op on the state).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    # layout: (B*H, S, ·) with chunk-minor grid carrying state across chunks
+    xr = jnp.moveaxis(x, 2, 1).reshape(b * h, sp, p)
+    dtr = jnp.moveaxis(dt, 2, 1).reshape(b * h, sp, 1)
+    ar = jnp.tile(A.astype(jnp.float32)[None, :], (b, 1)).reshape(b * h, 1)
+    br = jnp.repeat(Bm, h, axis=0).reshape(b, h, sp, n).reshape(b * h, sp, n)
+    cr = jnp.repeat(Cm, h, axis=0).reshape(b, h, sp, n).reshape(b * h, sp, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bh, cb: (bh, cb, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bh, cb: (bh, cb, 0)),
+            pl.BlockSpec((1, 1), lambda bh, cb: (bh, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, cb: (bh, cb, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, cb: (bh, cb, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda bh, cb: (bh, cb, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, p), x.dtype),
+        scratch_shapes=[_vmem((n, p))],
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    y = y.reshape(b, h, sp, p)[:, :, :s]
+    return jnp.moveaxis(y, 1, 2)  # (B, S, H, P)
+
+
+def _vmem(shape):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,14 @@
+"""Dispatching wrapper for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+from ..seg_agg.ops import kernel_impl
+from .kernel import ssd_scan_pallas
+from .ref import ssd_chunked_xla
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, impl: str | None = None):
+    """Chunked SSD scan: returns y (B, S, H, P)."""
+    impl = impl or kernel_impl()
+    if impl == "xla":
+        return ssd_chunked_xla(x, dt, A, Bm, Cm, chunk=chunk)
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=(impl == "interpret"))

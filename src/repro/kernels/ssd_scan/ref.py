@@ -1,0 +1,114 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (sequential scan).
+
+State-space duality (arXiv:2405.21060): per head h with state (P, N),
+
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * (x_t  outer  B_t)
+    y_t = h_t @ C_t
+
+x: (B, S, H, P); dt: (B, S, H) > 0; A: (H,) < 0; Bm, Cm: (B, S, N) (one state
+group, as in Mamba2).  Returns y: (B, S, H, P) and final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, init_state=None):
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(Af[None, :] * dtt)  # (B,H)
+        upd = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        state = state * decay[..., None, None] + upd  # (B,H,P,N)
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # (B,S,H,P)
+    return y, final
+
+
+def ssd_chunked_xla(x, dt, A, Bm, Cm, chunk: int = 128):
+    """Vectorized chunked SSD in plain jnp — the XLA lowering used by the
+    dry-run (mirrors the Pallas kernel's math and FLOP structure: per-chunk
+    (L,L) masked matmuls + an O(S/L) inter-chunk scan)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = Bm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = Cm.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Af = A.astype(jnp.float32)
+
+    adt = Af[None, None, None, :] * dtf  # (B,NC,L,H)
+    cum = jnp.cumsum(adt, axis=2)  # inclusive
+    total = cum[:, :, -1, :]  # (B,NC,H)
+
+    # intra-chunk
+    g = jnp.einsum("bcln,bcsn->bcls", Cf, Bf)  # (B,NC,L,L)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,NC,L,L,H)
+    m = jnp.where(mask[None, None, :, :, None], decay * dtf[:, :, None, :, :], 0.0)
+    y_intra = jnp.einsum("bcls,bclsh,bcshp->bclhp", g, m, xf)
+
+    # chunk state contributions
+    w = Bf[:, :, :, None, :] * (dtf * jnp.exp(total[:, :, None, :] - cum))[..., None]
+    chunk_states = jnp.einsum("bclhn,bclhp->bchpn", w, xf)  # (B,NC,H,P,N)
+
+    # inter-chunk scan over NC (short: S/L steps)
+    def step(state, inp):
+        tot, cs = inp  # (B,H), (B,H,P,N)
+        new = state * jnp.exp(tot)[..., None, None] + cs
+        return new, state  # emit the *previous* state for this chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(chunk_states, 1, 0)))
+    prev = jnp.moveaxis(prev_states, 0, 1)  # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", Cf, prev) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype)
+
+
+def ssd_final_state(x, dt, A, Bm, Cm=None):
+    """Final SSM state after the full sequence (for prefill cache seeding):
+    state = sum_t exp(cum_S - cum_t) * dt_t * (x_t outer B_t)."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    adt = A.astype(jnp.float32)[None, None, :] * dtf  # (B,S,H)
+    cum = jnp.cumsum(adt, axis=1)
+    w = dtf * jnp.exp(cum[:, -1:, :] - cum)  # (B,S,H)
+    return jnp.einsum("bshp,bsh,bsn->bhpn", xf, w, Bm.astype(jnp.float32))
+
+
+def ssd_decode_step(state, xt, dtt, A, bt, ct):
+    """Single decode step: state (B,H,P,N) -> (y (B,H,P), new state)."""
+    decay = jnp.exp(A[None, :].astype(jnp.float32) * dtt.astype(jnp.float32))
+    upd = (dtt[..., None, None].astype(jnp.float32)
+           * xt.astype(jnp.float32)[..., None]
+           * bt.astype(jnp.float32)[:, None, None, :])
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+    return y.astype(xt.dtype), state

@@ -1,0 +1,147 @@
+"""Shared model layers: norms, RoPE variants, GQA attention, GLU MLPs.
+
+All layers are pure functions over param dicts.  Weight layout is chosen for
+TP: projection matrices keep the sharded dimension last (wq/wk/wv/w1/w3) or
+first (wo/w2) so the 'model'-axis rules in distributed/sharding.py apply.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from ..kernels.decode_attn.ops import decode_attention
+from ..kernels.flash_attn.ops import flash_attention
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rotary
+
+
+def rope_angles(positions, head_dim: int, theta: float, fraction: float = 1.0):
+    """positions: (...,) -> (cos, sin) of shape (..., rot/2)."""
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, fraction: float = 1.0):
+    """x: (B, S, H, Dh); cos/sin: (B, S, rot/2) or (S, rot/2)."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction) // 2 * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype) if rot < dh else yr.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParamsSpec:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    qk_norm: bool
+
+
+def attn_param_shapes(s: AttnParamsSpec) -> dict:
+    shapes = {
+        "wq": (s.d_model, s.n_heads * s.head_dim),
+        "wk": (s.d_model, s.kv_heads * s.head_dim),
+        "wv": (s.d_model, s.kv_heads * s.head_dim),
+        "wo": (s.n_heads * s.head_dim, s.d_model),
+    }
+    if s.qk_norm:
+        shapes["q_norm"] = (s.head_dim,)
+        shapes["k_norm"] = (s.head_dim,)
+    return shapes
+
+
+def attention(p, x, *, n_heads, kv_heads, head_dim, qk_norm=False,
+              rope_theta=1e4, rope_fraction=1.0, positions=None,
+              kv_cache=None, cache_pos=None):
+    """GQA attention.
+
+    Training/prefill: x (B, S, D), kv_cache None -> (out, (k, v)) where k/v are
+    (B, Hkv, S, Dh) for cache seeding.
+    Decode: x (B, 1, D), kv_cache = (k, v) preallocated (B, Hkv, Smax, Dh),
+    cache_pos (B,) current lengths -> (out, updated cache).
+    """
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, kv_heads, head_dim)
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if positions is None:
+        positions = jnp.arange(s)[None, :] if cache_pos is None else cache_pos[:, None]
+    cos, sin = rope_angles(positions, head_dim, rope_theta, rope_fraction)
+    q = apply_rope(q, cos, sin, rope_fraction)
+    k = apply_rope(k, cos, sin, rope_fraction)
+
+    if kv_cache is None:
+        qh = hint(q.transpose(0, 2, 1, 3), "attn_heads")  # (B, H, S, Dh)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+        out = flash_attention(qh, kh, vh, causal=True)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+        return out @ p["wo"], (kh, vh)
+
+    ck, cv = kv_cache  # (B, Hkv, Smax, Dh)
+    idx = cache_pos  # (B,)
+    knew = k.reshape(b, kv_heads, head_dim)  # decode: s == 1
+    vnew = v.reshape(b, kv_heads, head_dim)
+    bidx = jnp.arange(b)
+    ck = ck.at[bidx, :, idx, :].set(knew.astype(ck.dtype))
+    cv = cv.at[bidx, :, idx, :].set(vnew.astype(cv.dtype))
+    qd = q.reshape(b, n_heads, head_dim)
+    out = decode_attention(qd, ck, cv, idx + 1)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    return out @ p["wo"], (ck, cv)
+
+
+# --------------------------------------------------------------------- MLPs
+
+
+def mlp_param_shapes(d_model: int, d_ff: int, activation: str) -> dict:
+    if activation in ("swiglu", "geglu"):
+        return {"w1": (d_model, d_ff), "w3": (d_model, d_ff), "w2": (d_ff, d_model)}
+    return {"w1": (d_model, d_ff), "w2": (d_ff, d_model)}  # squared_relu / gelu
+
+
+def mlp(p, x, activation: str):
+    h = x @ p["w1"]
+    if activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(h) * (x @ p["w3"])
+    elif activation == "squared_relu":
+        r = jax.nn.relu(h)
+        h = r * r
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    h = hint(h, "mlp_hidden")
+    return h @ p["w2"]

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD) attention-free LM.
+
+Each block: RMSNorm -> {z, x, B, C, dt} projections -> short causal depthwise
+conv on the x path -> chunked SSD scan (kernels/ssd_scan) -> D-skip ->
+silu(z) gating -> output projection.  The serving "KV cache" is the per-layer
+(conv buffer, SSM state) pair — O(1) in sequence length, which is what makes
+the long_500k decode shape feasible for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from ..kernels.ssd_scan.ops import ssd_scan
+from ..kernels.ssd_scan.ref import ssd_decode_step
+from .layers import rmsnorm
+from .model import ModelConfig, ShapeLeaf, scan_layers
+
+
+def block_param_shapes(cfg: ModelConfig) -> dict:
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "ln1": ShapeLeaf((cfg.d_model,)),
+        "wz": ShapeLeaf((cfg.d_model, di)),
+        "wx": ShapeLeaf((cfg.d_model, di)),
+        "wb": ShapeLeaf((cfg.d_model, n)),
+        "wc": ShapeLeaf((cfg.d_model, n)),
+        "wdt": ShapeLeaf((cfg.d_model, h)),
+        "dt_bias": ShapeLeaf((h,), jnp.float32),
+        "a_log": ShapeLeaf((h,), jnp.float32),
+        "d_skip": ShapeLeaf((h,), jnp.float32),
+        "conv": ShapeLeaf((cfg.conv_kernel, di)),
+        "out_proj": ShapeLeaf((di, cfg.d_model)),
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    block = block_param_shapes(cfg)
+    out = {
+        "embed": ShapeLeaf((cfg.vocab, cfg.d_model)),
+        "layers": {k: ShapeLeaf((cfg.n_layers, *v.shape), v.dtype)
+                   for k, v in block.items()},
+        "final_norm": ShapeLeaf((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ShapeLeaf((cfg.d_model, cfg.vocab))
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    from .transformer import init_params as tinit
+
+    params = tinit(cfg, key)  # generic scaled-normal init on the shape tree
+    # SSD-specific init: negative decay rates, small positive dt bias
+    lp = params["layers"]
+    lp["a_log"] = jnp.log(jnp.linspace(1.0, 8.0, cfg.ssm_heads))[None, :].repeat(cfg.n_layers, 0)
+    lp["dt_bias"] = jnp.full((cfg.n_layers, cfg.ssm_heads), -2.0, jnp.float32)
+    lp["d_skip"] = jnp.ones((cfg.n_layers, cfg.ssm_heads), jnp.float32)
+    return params
+
+
+def _causal_conv(x, w):
+    """x: (B, S, di); w: (K, di) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is 4: unrolled taps beat a conv op at this size
+        out = out + xp[:, i: i + x.shape[1]] * w[i][None, None, :]
+    return out
+
+
+def mamba_block(cfg: ModelConfig, lp, x, state=None, conv_buf=None):
+    """x: (B, S, D).  Train/prefill when state is None; else one-step decode
+    with state (B, H, P, N) and conv_buf (B, K-1, di)."""
+    b, s, d = x.shape
+    h_heads, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = rmsnorm(x, lp["ln1"])
+    z = xin @ lp["wz"]
+    xc = xin @ lp["wx"]
+    bm = (xin @ lp["wb"]).astype(jnp.float32)
+    cm = (xin @ lp["wc"]).astype(jnp.float32)
+    dt = jax.nn.softplus((xin @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+    a = -jnp.exp(lp["a_log"])
+
+    if state is None:
+        x_raw = xc  # pre-conv stream: what the decode conv buffer must hold
+        xc = _causal_conv(xc, lp["conv"])
+        xc = jax.nn.silu(xc)
+        xr = xc.reshape(b, s, h_heads, p_dim)
+        y = ssd_scan(xr, dt, a, bm, cm, chunk=128)
+        y = y + xr * lp["d_skip"][None, None, :, None].astype(y.dtype)
+        y = (y.reshape(b, s, -1) * jax.nn.silu(z)).astype(x.dtype)
+        out = y @ lp["out_proj"]
+        new_state = None
+        new_buf = x_raw[:, -(cfg.conv_kernel - 1):] if s >= cfg.conv_kernel - 1 else None
+    else:
+        # decode: conv over the rolling buffer, single SSD step
+        window = jnp.concatenate([conv_buf, xc], axis=1)  # (B, K, di)
+        xt = (window * lp["conv"][None]).sum(axis=1, keepdims=True)
+        xt = jax.nn.silu(xt)
+        xr = xt.reshape(b, h_heads, p_dim)
+        y, new_state = ssd_decode_step(
+            state, xr, dt[:, 0], a, bm[:, 0], cm[:, 0])
+        y = y + xr * lp["d_skip"][None, :, None].astype(y.dtype)
+        y = (y.reshape(b, 1, -1) * jax.nn.silu(z)).astype(x.dtype)
+        out = y @ lp["out_proj"]
+        new_buf = window[:, 1:]
+    return hint(x + out, "residual"), new_state, new_buf
+
+
+# ---------------------------------------------------------------- interface
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeddings=None):
+    from .transformer import embed_tokens, logits_fn
+
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+
+    def step(carry, lp):
+        y, _, _ = mamba_block(cfg, lp, carry)
+        return y, 0
+
+    x, _ = scan_layers(step, x, params["layers"])
+    return logits_fn(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    from .transformer import loss_fn as tl
+
+    logits = forward(cfg, params, tokens=batch.get("tokens"),
+                     embeddings=batch.get("embeddings"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeddings=None, cache_len: int = 0):
+    """Returns (last logits, {'state','conv'}, pos).  cache_len is moot for
+    SSM (state is O(1)); kept for interface parity."""
+    from .transformer import embed_tokens, logits_fn
+    from ..kernels.ssd_scan.ref import ssd_final_state
+
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+    states, bufs = [], []
+
+    def step(carry, lp):
+        xin = rmsnorm(carry, lp["ln1"])
+        x_raw = xin @ lp["wx"]  # pre-conv stream (decode conv buffer)
+        xc = jax.nn.silu(_causal_conv(x_raw, lp["conv"]))
+        bm = (xin @ lp["wb"]).astype(jnp.float32)
+        cm = (xin @ lp["wc"]).astype(jnp.float32)
+        dt = jax.nn.softplus((xin @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"])
+        xr = xc.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+        st = ssd_final_state(xr, dt, a, bm, cm)
+        y, _, _ = mamba_block(cfg, lp, carry)
+        buf = x_raw[:, -(cfg.conv_kernel - 1):]
+        return y, (st, buf)
+
+    x, (states, bufs) = scan_layers(step, x, params["layers"])
+    logits = logits_fn(cfg, params, x[:, -1:])
+    pos = jnp.full((b,), s, jnp.int32)
+    return logits[:, 0], {"state": states, "conv": bufs}, pos
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, pos):
+    from .transformer import embed_tokens, logits_fn
+
+    x = embed_tokens(cfg, params, token[:, None])
+
+    def step(carry, inp):
+        lp, st, buf = inp
+        y, new_st, new_buf = mamba_block(cfg, lp, carry, state=st, conv_buf=buf)
+        return y, (new_st, new_buf)
+
+    x, (states, bufs) = scan_layers(step, x, (params["layers"], caches["state"], caches["conv"]))
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], {"state": states, "conv": bufs}, pos + 1
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    l = cfg.n_layers
+    return {
+        "state": jnp.zeros((l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32),
+        "conv": jnp.zeros((l, batch, cfg.conv_kernel - 1, cfg.d_inner), cfg.dtype),
+    }

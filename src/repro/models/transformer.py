@@ -1,0 +1,213 @@
+"""Decoder-only transformer (dense and MoE families).
+
+Layer stacks are stored stacked (leading axis = layer) and executed with
+``jax.lax.scan``, keeping the HLO size constant in depth — essential for
+compiling 61-96-layer configs quickly in the dry-run.  The same code serves:
+
+  * ``loss_fn``     — training forward + cross-entropy (train_4k shapes),
+  * ``prefill``     — full-sequence forward returning seeded KV caches,
+  * ``decode_step`` — one-token step against preallocated KV caches.
+
+Audio/VLM archs (musicgen/pixtral) set ``embed_inputs=True``: prefill
+consumes precomputed frame/patch embeddings (the modality frontend stub) while
+decode consumes token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .layers import attention, attn_param_shapes, mlp, mlp_param_shapes, rmsnorm, AttnParamsSpec
+from .model import ModelConfig, ShapeLeaf, scan_layers
+from .moe import moe_ffn, moe_param_shapes
+
+
+# ------------------------------------------------------------- param shapes
+
+
+def _stack(shapes: dict, n: int) -> dict:
+    return {
+        k: ShapeLeaf((n, *v.shape), getattr(v, "dtype", None))
+        for k, v in shapes.items()
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    aspec = AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.qk_norm)
+    attn = {k: ShapeLeaf(v) for k, v in attn_param_shapes(aspec).items()}
+    norms = {"ln1": ShapeLeaf((cfg.d_model,)), "ln2": ShapeLeaf((cfg.d_model,))}
+
+    def dense_block():
+        return {**attn, **{f"mlp_{k}": ShapeLeaf(v) for k, v in
+                           mlp_param_shapes(cfg.d_model, cfg.d_ff, cfg.activation).items()},
+                **norms}
+
+    out: dict = {"embed": ShapeLeaf((cfg.vocab, cfg.d_model))}
+    if cfg.kind == "moe":
+        n_moe = cfg.n_layers - cfg.dense_layers
+        # dense stack uses a wider FFN (typical for kimi-style leading layers):
+        # fall back to 4*d_model when d_ff is the per-expert width
+        dense_ff = max(cfg.d_ff, 4 * cfg.d_model)
+        if cfg.dense_layers:
+            dblock = {**attn,
+                      **{f"mlp_{k}": ShapeLeaf(v) for k, v in
+                         mlp_param_shapes(cfg.d_model, dense_ff, cfg.activation).items()},
+                      **norms}
+            out["dense_layers"] = _stack(dblock, cfg.dense_layers)
+        e_shards = 16 if cfg.n_experts % 16 == 0 else 1
+        mblock = {**attn, **moe_param_shapes(cfg, e_shards), **norms}
+        out["layers"] = _stack(mblock, n_moe)
+    else:
+        out["layers"] = _stack(dense_block(), cfg.n_layers)
+    out["final_norm"] = ShapeLeaf((cfg.d_model,))
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ShapeLeaf((cfg.d_model, cfg.vocab))
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    """Random init matching the family's param_shapes (scaled normal)."""
+    shapes = cfg.param_shapes()  # dispatches on cfg.kind
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, ShapeLeaf))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        shape = leaf.shape
+        dtype = leaf.dtype or cfg.dtype
+        if len(shape) >= 2:
+            fan_in = shape[-2]
+            w = jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5)
+        else:
+            w = jnp.zeros(shape, jnp.float32)
+        out.append(w.astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _block(cfg: ModelConfig, lp: dict, x, kv_cache=None, cache_pos=None):
+    h, kv = attention(
+        lp, rmsnorm(x, lp["ln1"]),
+        n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        rope_fraction=cfg.rope_fraction, kv_cache=kv_cache, cache_pos=cache_pos,
+    )
+    x = hint(x + h, "residual")
+    hin = rmsnorm(x, lp["ln2"])
+    if "moe_w1" in lp:
+        h = moe_ffn(lp, hin, cfg)
+    else:
+        h = mlp({k[4:]: v for k, v in lp.items() if k.startswith("mlp_")},
+                hin, cfg.activation)
+    return hint(x + h, "residual"), kv
+
+
+def _run_stack(cfg, stack_params, x, collect_kv: bool):
+    """scan over stacked layers; optionally collect per-layer KV for caching."""
+
+    def step(carry, lp):
+        y, kv = _block(cfg, lp, carry)
+        return y, (kv if collect_kv else 0)
+
+    x, kvs = scan_layers(step, x, stack_params)
+    return x, kvs
+
+
+def embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.kind in ("dense", "moe"):
+        x = x * (cfg.d_model ** 0.5) if cfg.name.startswith("gemma") else x
+    return x
+
+
+def logits_fn(cfg, params, x):
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (x @ head.astype(x.dtype)).astype(jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeddings=None):
+    """Training/scoring forward -> logits (B, S, V)."""
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+    x = hint(x, "residual")
+    if "dense_layers" in params:
+        x, _ = _run_stack(cfg, params["dense_layers"], x, collect_kv=False)
+    x, _ = _run_stack(cfg, params["layers"], x, collect_kv=False)
+    return logits_fn(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """batch: {'tokens' or 'embeddings', 'labels'} -> mean xent loss."""
+    logits = forward(cfg, params,
+                     tokens=batch.get("tokens"), embeddings=batch.get("embeddings"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeddings=None, cache_len: int = 0):
+    """Seed KV caches.  Returns (last-token logits, caches, positions)."""
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+    caches = {}
+    if "dense_layers" in params:
+        x, kv = _run_stack(cfg, params["dense_layers"], x, collect_kv=True)
+        caches["dense_layers"] = _extend(kv, cache_len, s)
+    x, kv = _run_stack(cfg, params["layers"], x, collect_kv=True)
+    caches["layers"] = _extend(kv, cache_len, s)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    pos = jnp.full((b,), s, jnp.int32)
+    return logits[:, 0], caches, pos
+
+
+def _extend(kv, cache_len: int, s: int):
+    """Pad prefill KV (L, B, Hkv, S, Dh) out to the serving cache length."""
+    k, v = kv
+    if cache_len > s:
+        pad = ((0, 0), (0, 0), (0, 0), (0, cache_len - s), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return k, v
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, pos):
+    """One decode step.  token: (B,) int32; returns (logits, caches, pos+1)."""
+    x = embed_tokens(cfg, params, token[:, None])
+    new_caches = {}
+
+    def run(stack_params, cache, x):
+        def step(carry, inp):
+            lp, (ck, cv) = inp
+            y, kv = _block(cfg, lp, carry, kv_cache=(ck, cv), cache_pos=pos)
+            return y, kv
+
+        x, kv = scan_layers(step, x, (stack_params, cache))
+        return x, kv
+
+    if "dense_layers" in params:
+        x, kv = run(params["dense_layers"], caches["dense_layers"], x)
+        new_caches["dense_layers"] = kv
+    x, kv = run(params["layers"], caches["layers"], x)
+    new_caches["layers"] = kv
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], new_caches, pos + 1
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int, stacks=None):
+    """Preallocated zero KV caches (used by decode-only dry-run shapes)."""
+    out = {}
+    n_dense = cfg.dense_layers if cfg.kind == "moe" else 0
+    if n_dense:
+        shape = (n_dense, batch, cfg.kv_heads, cache_len, cfg.hd)
+        out["dense_layers"] = (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+    n = cfg.n_layers - n_dense
+    shape = (n, batch, cfg.kv_heads, cache_len, cfg.hd)
+    out["layers"] = (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+    return out

@@ -1,0 +1,198 @@
+"""Zamba2 hybrid: Mamba2 backbone with a *shared* attention block.
+
+One set of attention+MLP weights is re-applied after every ``attn_every``
+mamba layers (the Zamba2 signature move: global attention capacity at a tiny
+parameter cost).  The serving cache is therefore hybrid: per-mamba-layer
+(conv, SSM state) pairs plus per-*application* KV caches for the shared block
+(same weights, separate caches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import AttnParamsSpec, attention, attn_param_shapes, mlp, mlp_param_shapes, rmsnorm
+from .mamba2 import block_param_shapes, mamba_block
+from .model import ModelConfig, ShapeLeaf, scan_layers
+
+
+def _attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    mblock = block_param_shapes(cfg)
+    aspec = AttnParamsSpec(cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.qk_norm)
+    shared = {k: ShapeLeaf(v) for k, v in attn_param_shapes(aspec).items()}
+    shared.update({f"mlp_{k}": ShapeLeaf(v) for k, v in
+                   mlp_param_shapes(cfg.d_model, cfg.d_ff, cfg.activation).items()})
+    shared["ln1"] = ShapeLeaf((cfg.d_model,))
+    shared["ln2"] = ShapeLeaf((cfg.d_model,))
+    out = {
+        "embed": ShapeLeaf((cfg.vocab, cfg.d_model)),
+        "mamba": {k: ShapeLeaf((cfg.n_layers, *v.shape), v.dtype)
+                  for k, v in mblock.items()},
+        "shared_attn": shared,
+        "final_norm": ShapeLeaf((cfg.d_model,)),
+        "lm_head": ShapeLeaf((cfg.d_model, cfg.vocab)),
+    }
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    from .transformer import init_params as tinit
+
+    params = tinit(cfg, key)
+    lp = params["mamba"]
+    lp["a_log"] = jnp.log(jnp.linspace(1.0, 8.0, cfg.ssm_heads))[None, :].repeat(cfg.n_layers, 0)
+    lp["dt_bias"] = jnp.full((cfg.n_layers, cfg.ssm_heads), -2.0, jnp.float32)
+    lp["d_skip"] = jnp.ones((cfg.n_layers, cfg.ssm_heads), jnp.float32)
+    return params
+
+
+def _shared_block(cfg, sp, x, kv_cache=None, cache_pos=None):
+    h, kv = attention(
+        sp, rmsnorm(x, sp["ln1"]),
+        n_heads=cfg.n_heads, kv_heads=cfg.kv_heads, head_dim=cfg.hd,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        kv_cache=kv_cache, cache_pos=cache_pos,
+    )
+    x = x + h
+    h = mlp({k[4:]: v for k, v in sp.items() if k.startswith("mlp_")},
+            rmsnorm(x, sp["ln2"]), cfg.activation)
+    return x + h, kv
+
+
+def _segments(cfg: ModelConfig):
+    """[(start, length, apply_attn_after)] covering all mamba layers."""
+    segs = []
+    start = 0
+    while start < cfg.n_layers:
+        ln = min(cfg.attn_every, cfg.n_layers - start)
+        segs.append((start, ln, start + ln <= cfg.n_layers and ln == cfg.attn_every))
+        start += ln
+    return segs
+
+
+def _slice_stack(tree, start, length):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0), tree)
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeddings=None):
+    from .transformer import embed_tokens, logits_fn
+
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+
+    def mstep(carry, lp):
+        y, _, _ = mamba_block(cfg, lp, carry)
+        return y, 0
+
+    for start, ln, attn_after in _segments(cfg):
+        seg = _slice_stack(params["mamba"], start, ln)
+        x, _ = scan_layers(mstep, x, seg)
+        if attn_after:
+            x, _ = _shared_block(cfg, params["shared_attn"], x)
+    return logits_fn(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, tokens=batch.get("tokens"),
+                     embeddings=batch.get("embeddings"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeddings=None, cache_len: int = 0):
+    from .transformer import embed_tokens, logits_fn
+    from ..kernels.ssd_scan.ref import ssd_final_state
+    from .mamba2 import _causal_conv
+
+    x = embeddings.astype(cfg.dtype) if embeddings is not None else embed_tokens(cfg, params, tokens)
+    b, s = x.shape[0], x.shape[1]
+
+    def mstep(carry, lp):
+        xin = rmsnorm(carry, lp["ln1"])
+        x_raw = xin @ lp["wx"]  # pre-conv stream (decode conv buffer)
+        xc = jax.nn.silu(_causal_conv(x_raw, lp["conv"]))
+        bm = (xin @ lp["wb"]).astype(jnp.float32)
+        cm = (xin @ lp["wc"]).astype(jnp.float32)
+        dt = jax.nn.softplus((xin @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"])
+        xr = xc.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+        st = ssd_final_state(xr, dt, a, bm, cm)
+        y, _, _ = mamba_block(cfg, lp, carry)
+        return y, (st, x_raw[:, -(cfg.conv_kernel - 1):])
+
+    states, bufs, attn_kv = [], [], []
+    for start, ln, attn_after in _segments(cfg):
+        seg = _slice_stack(params["mamba"], start, ln)
+        x, (st, buf) = scan_layers(mstep, x, seg)
+        states.append(st)
+        bufs.append(buf)
+        if attn_after:
+            x, kv = _shared_block(cfg, params["shared_attn"], x)
+            k, v = kv
+            if cache_len > s:
+                pad = ((0, 0), (0, 0), (0, cache_len - s), (0, 0))
+                k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+            attn_kv.append((k, v))
+    caches = {
+        "state": jnp.concatenate(states, axis=0),
+        "conv": jnp.concatenate(bufs, axis=0),
+        "attn_k": jnp.stack([k for k, _ in attn_kv]),
+        "attn_v": jnp.stack([v for _, v in attn_kv]),
+    }
+    logits = logits_fn(cfg, params, x[:, -1:])
+    return logits[:, 0], caches, jnp.full((b,), s, jnp.int32)
+
+
+def decode_step(cfg: ModelConfig, params, token, caches, pos):
+    from .transformer import embed_tokens, logits_fn
+
+    x = embed_tokens(cfg, params, token[:, None])
+
+    def mstep(carry, inp):
+        lp, st, buf = inp
+        y, new_st, new_buf = mamba_block(cfg, lp, carry, state=st, conv_buf=buf)
+        return y, (new_st, new_buf)
+
+    new_states, new_bufs = [], []
+    new_k, new_v = [], []
+    app = 0
+    for start, ln, attn_after in _segments(cfg):
+        seg = _slice_stack(params["mamba"], start, ln)
+        st = jax.lax.slice_in_dim(caches["state"], start, start + ln, axis=0)
+        buf = jax.lax.slice_in_dim(caches["conv"], start, start + ln, axis=0)
+        x, (nst, nbuf) = scan_layers(mstep, x, (seg, st, buf))
+        new_states.append(nst)
+        new_bufs.append(nbuf)
+        if attn_after:
+            kv = (caches["attn_k"][app], caches["attn_v"][app])
+            x, (k, v) = _shared_block(cfg, params["shared_attn"], x,
+                                      kv_cache=kv, cache_pos=pos)
+            new_k.append(k)
+            new_v.append(v)
+            app += 1
+    caches = {
+        "state": jnp.concatenate(new_states, axis=0),
+        "conv": jnp.concatenate(new_bufs, axis=0),
+        "attn_k": jnp.stack(new_k),
+        "attn_v": jnp.stack(new_v),
+    }
+    logits = logits_fn(cfg, params, x)
+    return logits[:, 0], caches, pos + 1
+
+
+def make_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    apps = _attn_apps(cfg)
+    return {
+        "state": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, cfg.d_inner),
+                          cfg.dtype),
+        "attn_k": jnp.zeros((apps, batch, cfg.kv_heads, cache_len, cfg.hd), cfg.dtype),
+        "attn_v": jnp.zeros((apps, batch, cfg.kv_heads, cache_len, cfg.hd), cfg.dtype),
+    }

@@ -1,0 +1,151 @@
+"""Columnar star-schema datasets (the backend's storage layer).
+
+TPU-friendly representation: every column is a flat numpy array; string
+columns are dictionary-encoded (int32 codes + vocab) so the JAX executor works
+purely on integer/float arrays; dates are int32 days-since-epoch.  Dimension
+primary keys are row positions (0..n-1) by construction, so a fact->dimension
+join is a single gather by the foreign-key column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime as _dt
+from typing import Optional
+
+import numpy as np
+
+from ..core.schema import StarSchema
+
+_EPOCH = _dt.date(1970, 1, 1)
+
+
+def date_to_days(iso: str) -> int:
+    return (_dt.date.fromisoformat(str(iso)) - _EPOCH).days
+
+
+def days_to_date(days: int) -> str:
+    return (_EPOCH + _dt.timedelta(days=int(days))).isoformat()
+
+
+@dataclasses.dataclass
+class ColumnData:
+    dtype: str  # 'int' | 'float' | 'str' | 'date'
+    data: np.ndarray  # numeric values, int32 codes (str), int32 days (date)
+    vocab: Optional[np.ndarray] = None  # str columns: code -> string
+
+    def __post_init__(self):
+        if self.dtype == "str" and self.vocab is None:
+            # dictionary-encode on construction
+            vocab, codes = np.unique(np.asarray(self.data, dtype=str), return_inverse=True)
+            self.vocab = vocab
+            self.data = codes.astype(np.int32)
+        elif self.dtype == "date" and self.data.dtype.kind in ("U", "O"):
+            self.data = np.asarray([date_to_days(d) for d in self.data], dtype=np.int32)
+
+    @property
+    def n(self) -> int:
+        return len(self.data)
+
+    def encode_value(self, v):
+        """Map a literal to the physical domain (string->code, date->days)."""
+        if self.dtype == "str":
+            idx = np.searchsorted(self.vocab, str(v))
+            if idx < len(self.vocab) and self.vocab[idx] == str(v):
+                return int(idx)
+            return -1  # value absent: matches nothing
+        if self.dtype == "date":
+            return date_to_days(v)
+        return v
+
+    def decode(self, physical: np.ndarray) -> np.ndarray:
+        if self.dtype == "str":
+            return self.vocab[physical]
+        if self.dtype == "date":
+            return np.asarray([days_to_date(d) for d in physical])
+        return physical
+
+
+@dataclasses.dataclass
+class TableData:
+    name: str
+    columns: dict[str, ColumnData]
+
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).n if self.columns else 0
+
+
+@dataclasses.dataclass
+class Dataset:
+    schema: StarSchema
+    fact: TableData
+    dims: dict[str, TableData]
+    snapshot_id: str = "snap0"
+
+    # ------------------------------------------------------------- accessors
+    def table(self, name: str) -> TableData:
+        if name == self.fact.name:
+            return self.fact
+        return self.dims[name]
+
+    def column(self, qualified: str) -> ColumnData:
+        t, c = qualified.split(".", 1)
+        return self.table(t).columns[c]
+
+    def fact_aligned(self, qualified: str) -> np.ndarray:
+        """Physical values of ``table.column`` aligned to fact rows (dimension
+        columns are gathered through the FK; pk == row position)."""
+        t, c = qualified.split(".", 1)
+        if t == self.fact.name:
+            return self.fact.columns[c].data
+        dim = self.schema.dimension(t)
+        fk = self.fact.columns[dim.fact_fk].data
+        return self.dims[t].columns[c].data[fk]
+
+    # --------------------------------------------------------- hierarchy map
+    def level_mapper(self):
+        """Build the LevelMapper used by roll-up derivations: maps fine-level
+        *decoded* values to coarse-level decoded values via the dim table."""
+
+        def mapper(dim_name: str, fine: str, coarse: str, fine_values: np.ndarray):
+            dim = self.dims.get(dim_name)
+            if dim is None:
+                return None
+            fc, cc = dim.columns.get(fine), dim.columns.get(coarse)
+            if fc is None or cc is None:
+                return None
+            fine_dec = fc.decode(fc.data)
+            coarse_dec = cc.decode(cc.data)
+            lut: dict = {}
+            for f, c in zip(fine_dec, coarse_dec):
+                prev = lut.get(f)
+                if prev is not None and prev != c:
+                    return None  # not summarizable: child with two parents
+                lut[f] = c
+            try:
+                return np.asarray([lut[v] for v in fine_values])
+            except KeyError:
+                return None
+
+        return mapper
+
+    def validate_hierarchies(self) -> list[str]:
+        """Check declared-summarizable hierarchies are functional in the data."""
+        problems = []
+        for d in self.schema.dimensions:
+            td = self.dims.get(d.name)
+            if td is None:
+                continue
+            for h in d.hierarchies:
+                if not h.summarizable:
+                    continue
+                for fine, coarse in zip(h.levels, h.levels[1:]):
+                    fc, cc = td.columns.get(fine), td.columns.get(coarse)
+                    if fc is None or cc is None:
+                        continue
+                    pairs = {}
+                    for f, c in zip(fc.data, cc.data):
+                        if pairs.setdefault(int(f), int(c)) != int(c):
+                            problems.append(f"{d.name}: {fine}->{coarse} not functional")
+                            break
+        return problems

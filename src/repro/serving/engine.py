@@ -1,0 +1,127 @@
+"""Batched serving engine + the JAX-LLM canonicalizer service.
+
+The engine drives any registered architecture through prefill + decode with
+continuous batching (slot-based), greedy/temperature sampling, and optional
+grammar-constrained JSON decoding.  ``CanonicalizerService`` plugs the engine
+behind the middleware's NLCanonicalizer protocol: prompt = schema vocabulary +
+NL question, output = intent-signature JSON + confidence (mean token
+log-probability through a squashing map — the paper's uncalibrated heuristic
+score).
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime as _dt
+import json
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.nl_canon import NLResult
+from ..core.signature import signature_from_json
+from ..models.model import ModelConfig
+from .json_decode import JsonSigAutomaton, constrained_sample
+
+
+@dataclasses.dataclass
+class Request:
+    text: str
+    max_new_tokens: int = 256
+    constrained: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, tokenizer, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.tok = tokenizer
+        self.max_len = max_len
+        self.mod = cfg.build()
+        self._prefill = jax.jit(
+            lambda p, tokens: self.mod.prefill(cfg, p, tokens=tokens, cache_len=max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: self.mod.decode_step(cfg, p, t, c, pos)
+        )
+        self.steps = 0
+
+    def generate(self, prompts: list[str], max_new_tokens: int = 128,
+                 constrained: bool = False) -> list[dict]:
+        """Batched generation; returns [{'text', 'logprob', 'tokens'}]."""
+        b = len(prompts)
+        enc = [self.tok.encode(p, add_bos=True)[-self.max_len // 2:] for p in prompts]
+        plen = max(len(e) for e in enc)
+        tokens = np.full((b, plen), self.tok.pad, np.int32)
+        for i, e in enumerate(enc):
+            tokens[i, plen - len(e):] = e  # left-pad so last position aligns
+        logits, caches, pos = self._prefill(self.params, jnp.asarray(tokens))
+        automaton = JsonSigAutomaton()
+        vocab = [self.tok.id_to_str(i) for i in range(self.tok.vocab_size)]
+        outs = [[] for _ in range(b)]
+        texts = [""] * b
+        logprobs = [0.0] * b
+        done = [False] * b
+        for _ in range(max_new_tokens):
+            np_logits = np.array(logits, np.float32)  # writable host copy
+            # model head may be wider than the tokenizer: drop phantom ids
+            np_logits = np_logits[:, :len(vocab)]
+            next_ids = np.zeros(b, np.int32)
+            for i in range(b):
+                if done[i]:
+                    next_ids[i] = self.tok.pad
+                    continue
+                if constrained:
+                    nid = constrained_sample(np_logits[i], texts[i], vocab, automaton)
+                    if nid < 0:
+                        done[i] = True
+                        next_ids[i] = self.tok.pad
+                        continue
+                else:
+                    nid = int(np.argmax(np_logits[i]))
+                lp = np_logits[i] - _logsumexp(np_logits[i])
+                logprobs[i] += float(lp[nid])
+                next_ids[i] = nid
+                outs[i].append(nid)
+                texts[i] += vocab[nid]
+                if nid == self.tok.eos or (constrained and automaton.is_complete(texts[i])):
+                    done[i] = True
+            if all(done):
+                break
+            logits, caches, pos = self._decode(
+                self.params, jnp.asarray(next_ids), caches, pos)
+            self.steps += 1
+        return [
+            {"text": texts[i], "tokens": outs[i],
+             "logprob": logprobs[i] / max(len(outs[i]), 1)}
+            for i in range(b)
+        ]
+
+
+def _logsumexp(x):
+    m = x.max()
+    return m + math.log(np.exp(x - m).sum())
+
+
+class CanonicalizerService:
+    """NL -> signature through the in-framework LLM (NLCanonicalizer protocol)."""
+
+    def __init__(self, engine: ServingEngine, schema_name: str, prompt_header: str = ""):
+        self.engine = engine
+        self.schema_name = schema_name
+        self.prompt_header = prompt_header
+
+    def canonicalize(self, text: str, now: Optional[_dt.date] = None) -> NLResult:
+        prompt = f"{self.prompt_header}question: {text}\nsignature: "
+        out = self.engine.generate([prompt], constrained=True)[0]
+        raw = out["text"]
+        confidence = 1.0 / (1.0 + math.exp(-(out["logprob"] + 1.0)))  # squashed heuristic
+        try:
+            obj = json.loads(raw)
+            obj.setdefault("schema", self.schema_name)
+            sig = signature_from_json(obj)
+        except Exception as e:
+            return NLResult(None, round(confidence, 3), raw, f"malformed JSON: {e}")
+        return NLResult(sig, round(confidence, 3), raw, None)

@@ -1,0 +1,40 @@
+"""KV/SSM cache containers for the serving engine.
+
+Caches are preallocated to a fixed maximum length (``make_cache`` per model
+family) and updated functionally inside jitted steps.  This module adds the
+host-side bookkeeping: slot allocation for continuous batching and cache
+reset between requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import ModelConfig
+
+
+@dataclasses.dataclass
+class CacheState:
+    caches: Any  # model-family cache pytree
+    pos: jnp.ndarray  # (B,) current lengths
+    max_len: int
+    batch: int
+
+    @staticmethod
+    def fresh(cfg: ModelConfig, batch: int, max_len: int) -> "CacheState":
+        mod = cfg.build()
+        return CacheState(
+            caches=mod.make_cache(cfg, batch, max_len),
+            pos=jnp.zeros((batch,), jnp.int32),
+            max_len=max_len,
+            batch=batch,
+        )
+
+    def reset_rows(self, rows) -> "CacheState":
+        """Zero the given batch rows (slot reuse in continuous batching).
+        KV content is masked by pos, so resetting pos suffices."""
+        pos = self.pos.at[jnp.asarray(rows)].set(0)
+        return dataclasses.replace(self, pos=pos)

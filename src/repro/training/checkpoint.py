@@ -1,0 +1,175 @@
+"""Fault-tolerant sharded checkpointing.
+
+Design for 1000+-node operation:
+  * per-leaf .npy files under a step directory + a msgpack manifest carrying
+    tree structure, shapes, dtypes, mesh metadata, and per-file checksums;
+  * atomic commit: write to ``step_N.tmp``, fsync, rename — a crashed writer
+    never corrupts the latest valid checkpoint;
+  * ``restore_latest`` scans for the newest *complete* checkpoint (manifest
+    present + checksums match) and falls back to older ones — the restart
+    path after node failure;
+  * async save: the serialized bytes are handed to a background thread so the
+    train loop keeps stepping (snapshot-consistent: arrays are fetched to host
+    before the thread starts);
+  * **elastic re-mesh**: checkpoints store logical arrays, not device layouts,
+    so a checkpoint written on a 16x16 mesh restores onto 8x16 (or any other)
+    mesh — failed-pod exclusion and rescale are a restore, not a migration.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy can't serialize natively (bfloat16, fp8): stored as raw bytes
+_CUSTOM_DTYPES = {"bfloat16": ml_dtypes.bfloat16}
+for _name in ("float8_e4m3fn", "float8_e5m2"):
+    if hasattr(ml_dtypes, _name):
+        _CUSTOM_DTYPES[_name] = getattr(ml_dtypes, _name)
+
+
+def _encode(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """Byte-exact encoding for np.save: custom dtypes become uint8 buffers."""
+    name = arr.dtype.name
+    if name in _CUSTOM_DTYPES:
+        return np.ascontiguousarray(arr).view(np.uint8), name
+    return arr, name
+
+
+def _decode(arr: np.ndarray, dtype_name: str, shape) -> np.ndarray:
+    if dtype_name in _CUSTOM_DTYPES:
+        return arr.reshape(-1).view(_CUSTOM_DTYPES[dtype_name]).reshape(shape)
+    return arr
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+                    async_save: bool = False) -> str:
+    """Write checkpoint atomically; returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    # unique tmp per writer: concurrent async + sync saves of the same step
+    # must not clobber each other's staging directory
+    tmp = final + f".tmp.{os.getpid()}.{threading.get_ident()}"
+    # snapshot to host memory NOW (so async writes see a consistent state)
+    leaves = [(name, np.asarray(leaf)) for name, leaf in _flatten_with_paths(tree)]
+
+    def write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for name, arr in leaves:
+            fname = hashlib.md5(name.encode()).hexdigest()[:16] + ".npy"
+            fpath = os.path.join(tmp, fname)
+            enc, dtype_name = _encode(arr)
+            np.save(fpath, enc)
+            with open(fpath, "rb") as f:
+                digest = hashlib.md5(f.read()).hexdigest()
+            manifest["leaves"].append(
+                {"name": name, "file": fname, "shape": list(arr.shape),
+                 "dtype": dtype_name, "md5": digest})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        _PENDING.append(t)
+        return final
+    write()
+    return final
+
+
+_PENDING: list[threading.Thread] = []
+
+
+def wait_pending() -> None:
+    """Join outstanding async checkpoint writers (call before exit/restore)."""
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def _verify(path: str) -> Optional[dict]:
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        return None
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        for leaf in manifest["leaves"]:
+            fpath = os.path.join(path, leaf["file"])
+            with open(fpath, "rb") as f:
+                if hashlib.md5(f.read()).hexdigest() != leaf["md5"]:
+                    return None
+        return manifest
+    except (OSError, json.JSONDecodeError, KeyError):
+        return None
+
+
+def restore_latest(ckpt_dir: str, tree_like, shardings=None):
+    """Restore the newest valid checkpoint onto ``tree_like``'s structure.
+
+    ``shardings``: optional NamedSharding pytree — arrays are device_put with
+    the *current* mesh's shardings, which is exactly the elastic-rescale path.
+    Returns (tree, step, extra) or (None, -1, {}) when nothing valid exists.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return None, -1, {}
+    candidates = sorted(
+        (d for d in os.listdir(ckpt_dir)
+         if d.startswith("step_") and ".tmp" not in d),
+        reverse=True,
+    )
+    for cand in candidates:
+        path = os.path.join(ckpt_dir, cand)
+        manifest = _verify(path)
+        if manifest is None:
+            continue  # incomplete/corrupt: fall back to an older checkpoint
+        by_name = {l["name"]: l for l in manifest["leaves"]}
+        names = [name for name, _ in _flatten_with_paths(tree_like)]
+        if set(names) != set(by_name):
+            continue  # structure mismatch (e.g. different arch): keep looking
+        arrays = {
+            name: _decode(np.load(os.path.join(path, by_name[name]["file"])),
+                          by_name[name]["dtype"], by_name[name]["shape"])
+            for name in names
+        }
+        flat_named = _flatten_with_paths(tree_like)
+        leaves = [arrays[name] for name, _ in flat_named]
+        treedef = jax.tree.structure(tree_like)
+        tree = jax.tree.unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, manifest["step"], manifest.get("extra", {})
+    return None, -1, {}
+
+
+def prune_old(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    done = sorted(d for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and ".tmp" not in d)
+    for d in done[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

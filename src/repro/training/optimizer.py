@@ -1,0 +1,146 @@
+"""AdamW with gradient clipping, plus ZeRO-1 sharding specs and optional
+error-feedback int8 gradient compression.
+
+Pure-pytree implementation (no optax dependency).  The optimizer state
+carries fp32 master moments; with ZeRO-1 the moments (and the fp32 param
+copy, if enabled) are additionally sharded along the 'data' axis on their
+largest divisible dimension — the classic optimizer-state partitioning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, moment_specs=None):
+    """``moment_specs``: optional PartitionSpec tree for the (ZeRO-1-sharded)
+    moments.  When given, the whole update — including the fp32 math and the
+    bf16 downcast — is constrained to the moment sharding, so the param
+    all-gather that restores full replicas moves *bf16*, not fp32.  Without
+    it GSPMD is free to gather the fp32 update (2x interconnect bytes)."""
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    # global grad-norm clip
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, mspec):
+        def shard(x):
+            if mspec is None:
+                return x
+            return jax.lax.with_sharding_constraint(x, mspec)
+
+        gf = shard(g.astype(jnp.float32) * scale)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * shard(p.astype(jnp.float32))
+        new_p = shard(p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    if moment_specs is None:
+        flat_s = [None] * len(flat_p)
+    else:
+        flat_s = jax.tree.leaves(
+            moment_specs,
+            is_leaf=lambda x: isinstance(x, (P, jax.sharding.Sharding)) or x is None)
+    out = [upd(p, g, m, v, s)
+           for p, g, m, v, s in zip(flat_p, flat_g, flat_m, flat_v, flat_s)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm
+
+
+# ------------------------------------------------------------------- ZeRO-1
+
+
+def zero1_spec(spec: P, shape: tuple, data_axes: tuple, data_size: int) -> P:
+    """Extend a param's TP spec so optimizer moments also shard over the data
+    axes: pick the first dimension that is unsharded and divisible."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (ax, dim) in enumerate(zip(parts, shape)):
+        if ax is None and dim % data_size == 0 and dim >= data_size:
+            parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*parts)
+    return P(*parts)  # nothing divisible: stay TP-only
+
+
+def opt_state_specs(param_specs, param_shapes, data_axes: tuple, data_size: int):
+    moment = jax.tree.map(
+        lambda s, p: zero1_spec(s, p.shape, data_axes, data_size),
+        param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"m": moment, "v": moment, "step": P()}
+
+
+# --------------------------------------- error-feedback int8 compression
+
+
+def compress_grads(grads, residual: Optional[Any] = None):
+    """Error-feedback int8 quantization: returns (q, scales, new_residual).
+    Used before cross-pod gradient reduction to cut interconnect bytes 4x
+    (bf16 -> int8 + per-tensor scale); the quantization error feeds back into
+    the next step so convergence is preserved."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def q(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        qi = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - qi.astype(jnp.float32) * scale
+        return qi, scale, err
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, scales, errs = zip(*[q(g, r) for g, r in zip(flat, flat_r)])
+    return (jax.tree.unflatten(treedef, list(qs)),
+            jax.tree.unflatten(treedef, list(scales)),
+            jax.tree.unflatten(treedef, list(errs)))
+
+
+def decompress_grads(q, scales):
+    return jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q, scales)

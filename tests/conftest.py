@@ -1,0 +1,28 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def ssb_small():
+    from repro.workloads import ssb
+
+    return ssb.build(n_fact=4000, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tlc_small():
+    from repro.workloads import nyc_tlc
+
+    return nyc_tlc.build(n_fact=4000, seed=1)
+
+
+@pytest.fixture(scope="session")
+def tpcds_small():
+    from repro.workloads import tpcds
+
+    return tpcds.build(n_fact=4000, seed=2)

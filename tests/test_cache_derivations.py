@@ -1,0 +1,315 @@
+"""Cache behaviour + correctness-preserving derivations.
+
+The key property throughout: ANY table served by the cache must equal the
+backend's direct execution of the requested signature — zero false hits.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SemanticCache, Signature, Measure, Filter, TimeWindow
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.olap.executor import OlapExecutor
+
+
+@pytest.fixture(scope="module")
+def env(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    backend = OlapExecutor(ssb_small.dataset, impl="numpy")
+    return ssb_small, canon, backend
+
+
+def fresh_cache(wl, **kw):
+    return SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper(), **kw)
+
+
+J = ("JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+     "JOIN customer ON lineorder.lo_custkey = customer.c_key ")
+
+
+def q(levels, where="d_year = 1994"):
+    cols = ", ".join(levels)
+    return (f"SELECT {cols}, SUM(lo_revenue) AS r, COUNT(*) AS n "
+            f"FROM lineorder {J}WHERE {where} GROUP BY {cols}")
+
+
+class TestExactAndLRU:
+    def test_exact_hit(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        sig = canon.canonicalize(q(["c_region"]))
+        cache.put(sig, backend.execute(sig))
+        r = cache.lookup(sig)
+        assert r.status == "hit_exact"
+        assert r.table.equals(backend.execute(sig))
+
+    def test_lru_eviction(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl, capacity=2)
+        sigs = [canon.canonicalize(q(["c_region"], f"d_year = {y}"))
+                for y in (1994, 1995, 1996)]
+        for s in sigs:
+            cache.put(s, backend.execute(s))
+        assert len(cache) == 2
+        assert cache.lookup(sigs[0]).status == "miss"  # evicted (oldest)
+        assert cache.lookup(sigs[2]).status == "hit_exact"
+
+    def test_lru_touch_on_hit(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl, capacity=2)
+        s1 = canon.canonicalize(q(["c_region"], "d_year = 1994"))
+        s2 = canon.canonicalize(q(["c_region"], "d_year = 1995"))
+        s3 = canon.canonicalize(q(["c_region"], "d_year = 1996"))
+        cache.put(s1, backend.execute(s1))
+        cache.put(s2, backend.execute(s2))
+        cache.lookup(s1)  # refresh s1
+        cache.put(s3, backend.execute(s3))  # evicts s2, not s1
+        assert cache.lookup(s1).status == "hit_exact"
+        assert cache.lookup(s2).status == "miss"
+
+
+class TestRollup:
+    def test_rollup_matches_backend(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        fine = canon.canonicalize(q(["c_city", "c_nation"]))
+        cache.put(fine, backend.execute(fine))
+        for coarse_cols in (["c_nation"], ["c_region"], ["c_city"]):
+            coarse = canon.canonicalize(q(coarse_cols))
+            r = cache.lookup(coarse)
+            assert r.status == "hit_rollup", coarse_cols
+            assert r.table.equals(backend.execute(coarse)), coarse_cols
+
+    def test_rollup_count_and_minmax(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        sql_fine = (
+            "SELECT c_city, COUNT(*) AS n, MIN(lo_quantity) AS mn, "
+            "MAX(lo_quantity) AS mx FROM lineorder "
+            f"{J}WHERE d_year = 1994 GROUP BY c_city")
+        sql_coarse = sql_fine.replace("c_city", "c_nation")
+        fine = canon.canonicalize(sql_fine)
+        coarse = canon.canonicalize(sql_coarse)
+        cache.put(fine, backend.execute(fine))
+        r = cache.lookup(coarse)
+        assert r.status == "hit_rollup"
+        assert r.table.equals(backend.execute(coarse))
+
+    def test_avg_not_rollupable(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        fine = canon.canonicalize(
+            f"SELECT c_city, AVG(lo_quantity) a FROM lineorder {J}"
+            "WHERE d_year = 1994 GROUP BY c_city")
+        coarse = canon.canonicalize(
+            f"SELECT c_nation, AVG(lo_quantity) a FROM lineorder {J}"
+            "WHERE d_year = 1994 GROUP BY c_nation")
+        cache.put(fine, backend.execute(fine))
+        assert cache.lookup(coarse).status == "miss"
+
+    def test_drilldown_never_served(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        coarse = canon.canonicalize(q(["c_region"]))
+        fine = canon.canonicalize(q(["c_nation"]))
+        cache.put(coarse, backend.execute(coarse))
+        assert cache.lookup(fine).status == "miss"
+
+    def test_filter_mismatch_blocks_rollup(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        fine = canon.canonicalize(q(["c_city"], "d_year = 1994"))
+        other = canon.canonicalize(q(["c_nation"], "d_year = 1995"))
+        cache.put(fine, backend.execute(fine))
+        assert cache.lookup(other).status == "miss"
+
+    def test_order_by_disables_derivation(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        fine = canon.canonicalize(q(["c_city", "c_nation"]))
+        cache.put(fine, backend.execute(fine))
+        topk = canon.canonicalize(
+            f"SELECT c_nation, SUM(lo_revenue) AS r, COUNT(*) AS n FROM lineorder {J}"
+            "WHERE d_year = 1994 GROUP BY c_nation ORDER BY r DESC LIMIT 3")
+        assert cache.lookup(topk).status == "miss"
+
+
+class TestFilterDown:
+    def test_filterdown_matches_backend(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        superset = canon.canonicalize(q(["c_region", "c_nation"]))
+        cache.put(superset, backend.execute(superset))
+        tight = canon.canonicalize(
+            q(["c_region", "c_nation"], "d_year = 1994 AND c_region = 'ASIA'"))
+        r = cache.lookup(tight)
+        assert r.status == "hit_filterdown"
+        assert r.table.equals(backend.execute(tight))
+
+    def test_missing_attr_blocks_filterdown(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        superset = canon.canonicalize(q(["c_nation"]))
+        cache.put(superset, backend.execute(superset))
+        # c_region is not among cached columns -> not derivable
+        tight = canon.canonicalize(q(["c_nation"], "d_year = 1994 AND c_region = 'ASIA'"))
+        assert cache.lookup(tight).status == "miss"
+
+
+class TestInvalidation:
+    def test_closed_windows_survive_disjoint_updates(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        closed = canon.canonicalize(q(["c_region"], "d_year = 1994"))
+        cache.put(closed, backend.execute(closed))
+        dropped = cache.invalidate_snapshot("1998-01-01", "1998-02-01")
+        assert dropped == 0
+        assert cache.lookup(closed).status == "hit_exact"
+
+    def test_intersecting_window_dropped(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        s = canon.canonicalize(q(["c_region"], "d_year = 1994"))
+        cache.put(s, backend.execute(s))
+        assert cache.invalidate_snapshot("1994-06-01", "1994-07-01") == 1
+        assert cache.lookup(s).status == "miss"
+
+    def test_open_ended_always_dropped(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        sig = Signature(
+            schema=wl.schema.name, measures=(Measure("SUM", "lineorder.lo_revenue"),),
+            time_window=TimeWindow("1998-12-01", "1998-12-31", open_ended=True))
+        cache.put(sig, backend.execute(sig))
+        assert cache.invalidate_snapshot("1992-01-01", "1992-01-02") == 1
+
+    def test_no_window_dropped_conservatively(self, env):
+        wl, canon, backend = env
+        cache = fresh_cache(wl)
+        s = canon.canonicalize(
+            "SELECT c_region, SUM(lo_revenue) r FROM lineorder "
+            "JOIN customer ON lineorder.lo_custkey = customer.c_key GROUP BY c_region")
+        cache.put(s, backend.execute(s))
+        assert cache.invalidate_snapshot("1992-01-01", "1992-01-02") == 1
+
+
+# ------------------------------------------------------ hypothesis property
+
+
+_ENV_CACHE = {}
+
+
+def _get_env():
+    if "env" not in _ENV_CACHE:
+        from repro.workloads import ssb
+
+        wl = ssb.build(n_fact=4000, seed=0)
+        _ENV_CACHE["env"] = (
+            wl, SQLCanonicalizer(wl.schema), OlapExecutor(wl.dataset, impl="numpy"))
+    return _ENV_CACHE["env"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    year=st.sampled_from([1993, 1994, 1995]),
+    fine=st.sampled_from(["c_city", "c_nation"]),
+    data=st.data(),
+)
+def test_rollup_equals_backend_property(year, fine, data):
+    wl, canon, backend = _get_env()
+    hierarchy = {"c_city": ["c_nation", "c_region"], "c_nation": ["c_region"]}
+    coarse = data.draw(st.sampled_from(hierarchy[fine]))
+    cache = fresh_cache(wl)
+    fsig = canon.canonicalize(q([fine], f"d_year = {year}"))
+    csig = canon.canonicalize(q([coarse], f"d_year = {year}"))
+    cache.put(fsig, backend.execute(fsig))
+    r = cache.lookup(csig)
+    assert r.status == "hit_rollup"
+    assert r.table.equals(backend.execute(csig))
+
+
+class TestPersistence:
+    def test_spill_and_warm(self, tmp_path):
+        from repro.core.cache import load_cache, save_cache
+
+        wl, canon, backend = _get_env()
+        cache = fresh_cache(wl)
+        sigs = [canon.canonicalize(q(["c_region"], f"d_year = {y}"))
+                for y in (1994, 1995)]
+        for s in sigs:
+            cache.put(s, backend.execute(s))
+        n = save_cache(cache, str(tmp_path / "spill"))
+        assert n == 2
+        warm = fresh_cache(wl)
+        assert load_cache(warm, str(tmp_path / "spill")) == 2
+        for s in sigs:
+            r = warm.lookup(s)
+            assert r.status == "hit_exact"
+            assert r.table.equals(backend.execute(s))
+
+    def test_tampered_entry_refused(self, tmp_path):
+        import json
+
+        from repro.core.cache import load_cache, save_cache
+
+        wl, canon, backend = _get_env()
+        cache = fresh_cache(wl)
+        s = canon.canonicalize(q(["c_region"]))
+        cache.put(s, backend.execute(s))
+        save_cache(cache, str(tmp_path / "spill"))
+        mpath = tmp_path / "spill" / "manifest.json"
+        m = json.loads(mpath.read_text())
+        m[0]["signature"]["levels"] = ["customer.c_nation"]  # key mismatch now
+        mpath.write_text(json.dumps(m))
+        warm = fresh_cache(wl)
+        assert load_cache(warm, str(tmp_path / "spill")) == 0
+
+
+class TestComposeAndMetrics:
+    def test_composed_derivation_matches_backend(self):
+        """Beyond-paper: cached (nation, region) answers 'by region WHERE
+        nation=X' via filter-down o roll-up — still zero-false-hit."""
+        wl, canon, backend = _get_env()
+        cache = fresh_cache(wl, enable_compose=True)
+        superset = canon.canonicalize(q(["c_nation", "c_city"]))
+        cache.put(superset, backend.execute(superset))
+        tight = canon.canonicalize(
+            q(["c_city"], "d_year = 1994 AND c_nation = 'ASIA_NATION_0'"))
+        r = cache.lookup(tight)
+        assert r.status == "hit_compose"
+        assert r.table.equals(backend.execute(tight))
+
+    def test_compose_disabled_by_default(self):
+        wl, canon, backend = _get_env()
+        cache = fresh_cache(wl)
+        superset = canon.canonicalize(q(["c_nation", "c_city"]))
+        cache.put(superset, backend.execute(superset))
+        tight = canon.canonicalize(
+            q(["c_city"], "d_year = 1994 AND c_nation = 'ASIA_NATION_0'"))
+        assert cache.lookup(tight).status == "miss"
+
+    def test_governed_metrics_disambiguate(self):
+        from repro.core.metrics import GovernedMetric, MetricLayer
+        from repro.core.signature import Measure
+
+        wl, canon, backend = _get_env()
+        layer = MetricLayer((
+            GovernedMetric("fin.gross_revenue", "ssb",
+                           (Measure("SUM", "lineorder.lo_extendedprice"),),
+                           aliases=("revenue",)),
+            GovernedMetric("fin.net_revenue", "ssb",
+                           (Measure("SUM", "lineorder.lo_revenue"),)),
+        ))
+        a = layer.expand("fin.gross_revenue", levels=("customer.c_region",))
+        b = layer.expand("fin.net_revenue", levels=("customer.c_region",))
+        assert a.key() != b.key()
+        assert a.metric_id == "fin.gross_revenue"
+        # alias lookup pins NL 'revenue' to the governed definition
+        assert layer.resolve_alias("ssb", "Revenue").metric_id == "fin.gross_revenue"
+        # governed and identical ad-hoc signatures occupy disjoint key spaces
+        adhoc = a.replace(metric_id=None)
+        assert adhoc.key() != a.key()
+        # governed entries are cacheable like any other signature
+        cache = fresh_cache(wl)
+        cache.put(a, backend.execute(a))
+        assert cache.lookup(a).status == "hit_exact"

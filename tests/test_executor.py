@@ -1,0 +1,100 @@
+"""OLAP executor: numpy oracle vs seg_agg (XLA + interpret) paths, and
+SQL-semantics corner cases."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.olap.executor import OlapExecutor
+
+
+def test_all_intents_numpy_vs_xla(ssb_small, tlc_small, tpcds_small):
+    """The kernel-dispatch path must equal the independent numpy oracle for
+    every canonical intent of every workload."""
+    for wl in (ssb_small, tlc_small, tpcds_small):
+        canon = SQLCanonicalizer(wl.schema)
+        ex_np = OlapExecutor(wl.dataset, impl="numpy")
+        ex_xla = OlapExecutor(wl.dataset, impl="xla")
+        for intent in wl.intents:
+            sig = canon.canonicalize(intent.sql)
+            a = ex_np.execute(sig)
+            b = ex_xla.execute(sig)
+            assert a.equals(b, ordered=bool(sig.order_by)), intent.id
+
+
+def test_interpret_kernel_path(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    ex_np = OlapExecutor(ssb_small.dataset, impl="numpy")
+    ex_pl = OlapExecutor(ssb_small.dataset, impl="interpret")
+    for intent in ssb_small.intents[:4]:
+        sig = canon.canonicalize(intent.sql)
+        assert ex_np.execute(sig).equals(ex_pl.execute(sig)), intent.id
+
+
+def test_empty_groups_absent(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    ex = OlapExecutor(ssb_small.dataset, impl="numpy")
+    sig = canon.canonicalize(
+        "SELECT c_region, COUNT(*) AS n FROM lineorder "
+        "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+        "WHERE lo_quantity > 9999 GROUP BY c_region")
+    assert ex.execute(sig).num_rows == 0
+
+
+def test_global_aggregate_single_row(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    ex = OlapExecutor(ssb_small.dataset, impl="numpy")
+    sig = canon.canonicalize("SELECT SUM(lo_revenue) AS r FROM lineorder")
+    t = ex.execute(sig)
+    assert t.num_rows == 1
+    expected = float(np.sum(ssb_small.dataset.fact.columns["lo_revenue"].data))
+    assert abs(float(t.columns["m0"][0]) - expected) / expected < 1e-9
+
+
+def test_having_order_limit(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    ex = OlapExecutor(ssb_small.dataset, impl="numpy")
+    sig = canon.canonicalize(
+        "SELECT c_nation, SUM(lo_revenue) AS r FROM lineorder "
+        "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+        "GROUP BY c_nation HAVING SUM(lo_revenue) > 0 ORDER BY r DESC LIMIT 5")
+    t = ex.execute(sig)
+    assert t.num_rows == 5
+    vals = t.columns["m0"]
+    assert all(vals[i] >= vals[i + 1] for i in range(len(vals) - 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    qty=st.integers(1, 50),
+    op=st.sampled_from(["<", "<=", ">", ">="]),
+    year=st.integers(1992, 1998),
+)
+def test_filter_property_vs_oracle(qty, op, year):
+    """Executor results == direct numpy computation for arbitrary filters."""
+    wl = _wl()
+    canon = SQLCanonicalizer(wl.schema)
+    ex = OlapExecutor(wl.dataset, impl="xla")
+    sig = canon.canonicalize(
+        f"SELECT SUM(lo_revenue) AS r, COUNT(*) AS n FROM lineorder "
+        f"JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+        f"WHERE lo_quantity {op} {qty} AND d_year = {year}")
+    t = ex.execute(sig)
+    f = wl.dataset.fact.columns
+    years = wl.dataset.fact_aligned("dates.d_year")
+    m = {"<": np.less, "<=": np.less_equal, ">": np.greater, ">=": np.greater_equal}
+    mask = m[op](f["lo_quantity"].data, qty) & (years == year)
+    np.testing.assert_allclose(float(t.columns["m0"][0]),
+                               float(f["lo_revenue"].data[mask].sum()), rtol=1e-6)
+    assert int(t.columns["m1"][0]) == int(mask.sum())
+
+
+_CACHE = {}
+
+
+def _wl():
+    if "wl" not in _CACHE:
+        from repro.workloads import ssb
+
+        _CACHE["wl"] = ssb.build(n_fact=3000, seed=3)
+    return _CACHE["wl"]

@@ -1,0 +1,149 @@
+"""Per-kernel correctness sweeps: Pallas (interpret mode) vs pure-jnp oracle
+across shapes and dtypes, as required for every kernel in kernels/."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------------ seg_agg
+
+
+@pytest.mark.parametrize("n,m,g", [(512, 1, 16), (1000, 3, 17), (4096, 2, 512),
+                                   (777, 4, 1000), (64, 1, 5)])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_seg_agg(n, m, g, op):
+    from repro.kernels.seg_agg.kernel import seg_agg_pallas
+    from repro.kernels.seg_agg.ref import seg_agg_ref
+
+    vals = rng.normal(size=(n, m)).astype(np.float32)
+    ids = rng.integers(0, g, size=n).astype(np.int32)
+    mask = (rng.random(n) > 0.3).astype(np.float32)
+    ref = np.asarray(seg_agg_ref(vals, ids, mask, g, op))
+    out = np.asarray(seg_agg_pallas(vals, ids, mask, g, op, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_seg_agg_dtypes():
+    from repro.kernels.seg_agg.kernel import seg_agg_pallas
+    from repro.kernels.seg_agg.ref import seg_agg_ref
+
+    vals = rng.normal(size=(256, 2)).astype(np.float16).astype(np.float32)
+    ids = rng.integers(0, 31, size=256).astype(np.int32)
+    mask = np.ones(256, np.float32)
+    for dt in (jnp.float32, jnp.bfloat16):
+        v = jnp.asarray(vals, dt)
+        ref = np.asarray(seg_agg_ref(v, ids, mask, 31, "sum"))
+        out = np.asarray(seg_agg_pallas(v, ids, mask, 31, "sum", interpret=True))
+        np.testing.assert_allclose(out, ref, rtol=1e-2, atol=1e-2)
+
+
+# --------------------------------------------------------------- flash attn
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh", [
+    (2, 4, 2, 256, 64), (1, 8, 1, 128, 32), (1, 4, 4, 100, 64), (2, 2, 2, 64, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, h, hkv, s, dh, causal):
+    from repro.kernels.flash_attn.kernel import flash_attention_pallas
+    from repro.kernels.flash_attn.ref import mha_ref
+
+    q = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, s, dh)).astype(np.float32)
+    ref = np.asarray(mha_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal))
+    out = np.asarray(flash_attention_pallas(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+        tq=64, tk=64, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attn.kernel import flash_attention_pallas
+    from repro.kernels.flash_attn.ref import mha_ref
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.bfloat16)
+    ref = np.asarray(mha_ref(q, k, v)).astype(np.float32)
+    out = np.asarray(flash_attention_pallas(q, k, v, tq=64, tk=64, interpret=True)).astype(np.float32)
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)
+
+
+# -------------------------------------------------------------- decode attn
+
+
+@pytest.mark.parametrize("b,h,hkv,s,dh,tk", [
+    (2, 8, 2, 512, 64, 128), (1, 4, 1, 300, 128, 128), (3, 4, 4, 128, 32, 64),
+])
+def test_decode_attention(b, h, hkv, s, dh, tk):
+    from repro.kernels.decode_attn.kernel import decode_attention_pallas
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+
+    q = rng.normal(size=(b, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, hkv, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, hkv, s, dh)).astype(np.float32)
+    pos = rng.integers(1, s + 1, size=b).astype(np.int32)
+    ref = np.asarray(decode_attention_ref(*map(jnp.asarray, (q, k, v, pos))))
+    out = np.asarray(decode_attention_pallas(
+        *map(jnp.asarray, (q, k, v, pos)), tk=tk, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_pos_mask_exact():
+    """Entries beyond pos must not contribute at all."""
+    from repro.kernels.decode_attn.kernel import decode_attention_pallas
+
+    b, h, s, dh = 1, 2, 64, 32
+    q = rng.normal(size=(b, h, dh)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, dh)).astype(np.float32)
+    pos = np.asarray([10], np.int32)
+    out1 = np.asarray(decode_attention_pallas(*map(jnp.asarray, (q, k, v, pos)),
+                                              tk=32, interpret=True))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, 10:] = 999.0
+    v2[:, :, 10:] = -999.0
+    out2 = np.asarray(decode_attention_pallas(*map(jnp.asarray, (q, k2, v2, pos)),
+                                              tk=32, interpret=True))
+    np.testing.assert_allclose(out1, out2, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------- ssd scan
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 256, 4, 64, 32, 64), (1, 100, 2, 32, 16, 32), (1, 512, 3, 16, 64, 128),
+])
+def test_ssd_scan(b, s, h, p, n, chunk):
+    from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+    from repro.kernels.ssd_scan.ref import ssd_chunked_xla, ssd_ref
+
+    x = rng.normal(size=(b, s, h, p)).astype(np.float32)
+    dt = (0.001 + rng.random((b, s, h)) * 0.1).astype(np.float32)
+    A = (-rng.random(h) * 2 - 0.1).astype(np.float32)
+    Bm = rng.normal(size=(b, s, n)).astype(np.float32)
+    Cm = rng.normal(size=(b, s, n)).astype(np.float32)
+    ref, _ = ssd_ref(*map(jnp.asarray, (x, dt, A, Bm, Cm)))
+    ref = np.asarray(ref)
+    xla = np.asarray(ssd_chunked_xla(*map(jnp.asarray, (x, dt, A, Bm, Cm)), chunk=chunk))
+    pal = np.asarray(ssd_scan_pallas(*map(jnp.asarray, (x, dt, A, Bm, Cm)),
+                                     chunk=chunk, interpret=True))
+    np.testing.assert_allclose(xla, ref, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(pal, ref, rtol=5e-3, atol=5e-3)
+
+
+def test_ssd_final_state_matches_sequential():
+    from repro.kernels.ssd_scan.ref import ssd_final_state, ssd_ref
+
+    b, s, h, p, n = 1, 96, 2, 16, 8
+    x = rng.normal(size=(b, s, h, p)).astype(np.float32)
+    dt = (0.01 + rng.random((b, s, h)) * 0.05).astype(np.float32)
+    A = (-rng.random(h) - 0.1).astype(np.float32)
+    Bm = rng.normal(size=(b, s, n)).astype(np.float32)
+    Cm = rng.normal(size=(b, s, n)).astype(np.float32)
+    _, final = ssd_ref(*map(jnp.asarray, (x, dt, A, Bm, Cm)))
+    est = ssd_final_state(*map(jnp.asarray, (x, dt, A, Bm)))
+    np.testing.assert_allclose(np.asarray(est), np.asarray(final), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,155 @@
+"""End-to-end middleware behaviour: zero false hits, bypass paths, NL safety
+gating, adversarial calibration, and the paper's cross-surface reuse."""
+import collections
+import datetime
+
+import pytest
+
+from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,
+                        SemanticCacheMiddleware, SimulatedLLM)
+from repro.olap.executor import OlapExecutor
+
+QUAL = ("customer region", "supplier region", "customer city", "supplier city",
+        "customer nation", "supplier nation", "pickup zone", "dropoff zone",
+        "pickup borough", "dropoff borough")
+
+
+def mk(wl, model="oracle", policy=None, **cache_kw):
+    backend = OlapExecutor(wl.dataset, impl="numpy")
+    cache = SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper(), **cache_kw)
+    llm = MemoizedNL(SimulatedLLM(wl.vocab, model=model))
+    policy = policy or SafetyPolicy.balanced(wl.spatial_ambiguous, qualified=QUAL)
+    return SemanticCacheMiddleware(wl.schema, backend, cache, nl=llm, policy=policy), backend
+
+
+class TestZeroFalseHits:
+    def test_every_hit_equals_backend(self, ssb_small):
+        """The paper's RQ2 invariant, audited per query."""
+        mw, backend = mk(ssb_small)
+        oracle = OlapExecutor(ssb_small.dataset, impl="numpy")
+        false_hits = 0
+        for q in ssb_small.queries(sql_variants=6, nl_paraphrases=4):
+            r = mw.query_sql(q.text) if q.kind == "sql" else mw.query_nl(q.text)
+            if r.hit:
+                direct = oracle.execute(r.signature)
+                if not r.table.equals(direct, ordered=bool(r.signature.order_by)):
+                    false_hits += 1
+        assert false_hits == 0
+
+    def test_hierarchical_zero_false_hits(self, ssb_small):
+        from repro.workloads import hierarchical
+
+        mw, _ = mk(ssb_small)
+        oracle = OlapExecutor(ssb_small.dataset, impl="numpy")
+        for q in hierarchical.build_stream(8):
+            r = mw.query_sql(q.text)
+            if r.hit:
+                assert r.table.equals(oracle.execute(r.signature)), q.intent_id
+
+
+class TestBypass:
+    def test_out_of_scope_sql_bypasses(self, ssb_small):
+        mw, backend = mk(ssb_small)
+        r = mw.query_sql("SELECT a FROM t UNION SELECT b FROM u")
+        assert r.status == "bypass"
+        assert backend.executions == 1  # still executed on the backend
+
+    def test_invalid_reference_bypasses(self, ssb_small):
+        mw, _ = mk(ssb_small)
+        r = mw.query_sql("SELECT SUM(no_such_col) FROM lineorder")
+        assert r.status == "bypass"
+        assert "no_such_col" in (r.bypass_reason or "")
+
+    def test_bypass_never_stores(self, ssb_small):
+        mw, _ = mk(ssb_small)
+        mw.query_sql("SELECT a FROM t UNION SELECT b FROM u")
+        assert len(mw.cache) == 0
+
+
+class TestNLSafety:
+    def test_low_confidence_gated(self, tlc_small):
+        mw, _ = mk(tlc_small, model="gpt-4o-mini",
+                   policy=SafetyPolicy(confidence_threshold=0.99))
+        r = mw.query_nl("total earnings by pickup borough in 2024")
+        assert r.status == "bypass"
+        assert "confidence" in r.bypass_reason
+
+    def test_relative_time_without_now_gated(self, tlc_small):
+        mw, _ = mk(tlc_small)
+        r = mw.query_nl("total earnings by pickup borough last month")
+        assert r.status == "bypass"
+
+    def test_relative_time_with_now_allowed(self, tlc_small):
+        mw, _ = mk(tlc_small)
+        r = mw.query_nl("total earnings by pickup borough last month",
+                        now=datetime.date(2024, 3, 15))
+        assert r.status != "bypass"
+        assert r.signature.time_window.open_ended
+
+    def test_spatial_ambiguity_gated(self, tlc_small):
+        mw, _ = mk(tlc_small)
+        r = mw.query_nl("total earnings by area in 2024")
+        assert r.status == "bypass"
+        assert "spatial" in r.bypass_reason
+
+    def test_aggword_mismatch_gated(self, tlc_small):
+        """Policy with agg-word heuristic rejects a signature whose agg
+        contradicts the text."""
+        policy = SafetyPolicy.conservative(tlc_small.spatial_ambiguous, QUAL)
+        mw, _ = mk(tlc_small, policy=policy)
+        # force a wrong-agg signature through a doctored vocab entry
+        from repro.core.nl_canon import NLResult
+        from repro.core.safety import gate_nl
+        from repro.core.signature import Measure, Signature
+
+        sig = Signature(schema="nyc_tlc", measures=(Measure("COUNT", "*"),))
+        res = NLResult(sig, 0.9, "{}")
+        gate = gate_nl(policy, "average fare by year", res,
+                       now=datetime.date(2024, 1, 1))
+        assert not gate.allow
+
+    def test_sql_seeded_mode_blocks_nl_stores(self, tlc_small):
+        policy = SafetyPolicy(confidence_threshold=None, heuristic_time=False,
+                              heuristic_spatial=False, heuristic_aggword=False,
+                              sql_seeded_only=True)
+        mw, _ = mk(tlc_small, policy=policy)
+        r = mw.query_nl("total earnings by pickup borough in 2024")
+        assert r.status == "miss"
+        assert len(mw.cache) == 0  # read-only for NL
+
+    def test_cross_surface_hit(self, tlc_small):
+        mw, _ = mk(tlc_small)
+        sql = ("SELECT pu_borough, SUM(total_amount) AS earnings FROM trips "
+               "JOIN zones_pu ON trips.pu_zone_key = zones_pu.zpu_key "
+               "JOIN dates ON trips.pickup_date_key = dates.d_key "
+               "WHERE d_year = 2024 GROUP BY pu_borough")
+        assert mw.query_sql(sql).status == "miss"
+        r = mw.query_nl("Show total earnings by pickup borough in 2024")
+        assert r.hit
+        assert r.source_origin == "sql"
+        assert mw.cache.stats.cross_surface_hits == 1
+
+
+class TestAdversarialCalibration:
+    def test_table2_counts(self):
+        """The calibrated profiles reproduce Table 2 / Table 5b exactly."""
+        from repro.workloads import adversarial, nyc_tlc, ssb, tpcds
+
+        qs = adversarial.build()
+        vocabs = {"ssb": ssb.build_vocab(), "nyc_tlc": nyc_tlc.build_vocab(),
+                  "tpcds": tpcds.build_vocab()}
+        for model, want in [("gpt-4o-mini", (28, 30, 5)),
+                            ("claude-3.5-haiku", (38, 25, 0))]:
+            llms = {k: SimulatedLLM(v, model=model) for k, v in vocabs.items()}
+            res = [llms[q.schema].canonicalize(q.text, now=None) for q in qs]
+            sc = adversarial.score(qs, res)
+            tot = collections.Counter()
+            for b in sc["per_type"].values():
+                tot.update(b)
+            assert (tot["correct"], tot["wrong"], tot["invalid"]) == want, model
+
+    def test_memoization(self, tlc_small):
+        llm = MemoizedNL(SimulatedLLM(tlc_small.vocab))
+        llm.canonicalize("total earnings by pickup borough in 2024")
+        llm.canonicalize("total earnings by pickup borough in 2024")
+        assert llm.calls == 1 and llm.memo_hits == 1

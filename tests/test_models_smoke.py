@@ -1,0 +1,86 @@
+"""Per-arch smoke tests (assignment requirement): a REDUCED config of each
+family runs one forward/train step on CPU with correct shapes and no NaNs,
+plus a prefill-vs-forward teacher-forcing consistency check."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED, CONFIGS, reduced
+
+B, S = 2, 32
+
+
+def make_batch(cfg):
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+    if cfg.embed_inputs:
+        return {"embeddings": jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)), cfg.dtype),
+            "labels": jnp.asarray(labels)}
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32),
+            "labels": jnp.asarray(labels)}
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_smoke_forward_and_train_step(name):
+    cfg = reduced(name)
+    mod = cfg.build()
+    params = mod.init_params(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(lambda p: mod.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss)), name
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves), name
+    # one optimizer step
+    from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+    new_p, _, gnorm = adamw_update(AdamWConfig(), params, grads, init_opt_state(params))
+    assert np.isfinite(float(gnorm))
+    assert jax.tree.structure(new_p) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("name", ["qwen3-32b", "kimi-k2-1t-a32b", "mamba2-780m",
+                                  "zamba2-7b", "musicgen-large"])
+def test_prefill_decode_consistency(name):
+    """Teacher forcing: decode-step logits must match full-forward logits.
+
+    MoE runs with a generous capacity factor: capacity *truncation* is a
+    train-time policy that legitimately differs between a 1-token decode and
+    a full forward, so the consistency oracle needs drop-free routing."""
+    cfg = dataclasses.replace(reduced(name), dtype=jnp.float32,
+                              capacity_factor=64.0)
+    mod = cfg.build()
+    params = mod.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, S)), jnp.int32)
+    kw = ({"embeddings": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)}
+          if cfg.embed_inputs else {"tokens": tokens})
+    full = np.asarray(mod.forward(cfg, params, **kw))  # (B, S, V)
+
+    logits, caches, pos = mod.prefill(cfg, params, cache_len=S + 8, **kw)
+    np.testing.assert_allclose(np.asarray(logits), full[:, -1], rtol=2e-2, atol=2e-2)
+    if cfg.embed_inputs:
+        return  # decode continues in token space; no teacher-forcing oracle
+    # step one token forward and compare against forward over extended seq
+    nxt = tokens[:, -1]  # arbitrary teacher-forced token
+    logits2, caches, pos = mod.decode_step(cfg, params, nxt, caches, pos)
+    ext = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+    full2 = np.asarray(mod.forward(cfg, params, tokens=ext))
+    np.testing.assert_allclose(np.asarray(logits2), full2[:, -1], rtol=3e-2, atol=3e-2)
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED) == 10
+    kinds = {CONFIGS[a].kind for a in ASSIGNED}
+    assert kinds == {"dense", "moe", "ssm", "hybrid"}
+
+
+def test_param_counts_sane():
+    assert CONFIGS["nemotron-4-340b"].param_count() / 1e9 == pytest.approx(340, rel=0.06)
+    assert CONFIGS["kimi-k2-1t-a32b"].param_count() / 1e9 == pytest.approx(1000, rel=0.30)
+    active = CONFIGS["kimi-k2-1t-a32b"].active_param_count()
+    assert active / 1e9 == pytest.approx(32, rel=0.45)
+    assert CONFIGS["mamba2-780m"].param_count() / 1e6 == pytest.approx(780, rel=0.25)

@@ -1,0 +1,84 @@
+"""Serving engine + grammar-constrained JSON decoding."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced
+from repro.serving.json_decode import JsonSigAutomaton, constrained_sample
+
+
+class TestAutomaton:
+    def test_legal_prefixes(self):
+        a = JsonSigAutomaton()
+        for p in ['', '{', '{"schema"', '{"schema": "ssb", "measures": [{"agg": "SUM"',
+                  '{"measures": [{"agg": "SUM", "expr": "t.x"}]}']:
+            assert a.is_legal_prefix(p), p
+
+    def test_illegal_prefixes(self):
+        a = JsonSigAutomaton()
+        for p in ['}', 'x{', '{]', '{"a": }}', '{)']:
+            assert not a.is_legal_prefix(p), p
+
+    def test_completion(self):
+        a = JsonSigAutomaton()
+        assert a.is_complete('{"schema": "s", "measures": [{"agg": "SUM", "expr": "t.x"}]}')
+        assert not a.is_complete('{"schema": "s"}')
+        assert not a.is_complete('{"schema": "s", "measures": [')
+
+    def test_mask_blocks_illegal(self):
+        a = JsonSigAutomaton()
+        vocab = ['{', '}', '[', ']', '"agg"', 'xx(', ':', ' ']
+        mask = a.token_mask("", vocab)
+        assert mask[0] and not mask[1]  # must open with '{'
+        assert not mask[5]
+
+    def test_constrained_sample_stays_legal(self):
+        rng = np.random.default_rng(0)
+        a = JsonSigAutomaton()
+        vocab = list('{}[]":,') + ['"schema"', '"measures"', '"agg"', '"SUM"',
+                                   '"expr"', '"t.x"', ' ', 'a', 'b', '1']
+        prefix = ""
+        for _ in range(40):
+            logits = rng.normal(size=len(vocab)).astype(np.float32)
+            nid = constrained_sample(logits, prefix, vocab, a)
+            if nid < 0:
+                break
+            prefix += vocab[nid]
+            assert a.is_legal_prefix(prefix), prefix
+
+
+class TestEngine:
+    @pytest.fixture(scope="class")
+    def engine(self, ssb_small):
+        from repro.serving.engine import ServingEngine
+        from repro.training.tokenizer import build_tokenizer
+
+        cfg = dataclasses.replace(reduced("canonicalizer-100m"), vocab=4096)
+        tok = build_tokenizer([ssb_small])
+        mod = cfg.build()
+        params = mod.init_params(cfg, jax.random.PRNGKey(0))
+        return ServingEngine(cfg, params, tok, max_len=128)
+
+    def test_batched_generate(self, engine):
+        outs = engine.generate(["total revenue by year", "number of orders"],
+                               max_new_tokens=8)
+        assert len(outs) == 2
+        assert all(len(o["tokens"]) <= 8 for o in outs)
+        assert all(np.isfinite(o["logprob"]) for o in outs)
+
+    def test_constrained_generate_stays_legal(self, engine):
+        a = JsonSigAutomaton()
+        out = engine.generate(["q"], max_new_tokens=24, constrained=True)[0]
+        assert a.is_legal_prefix(out["text"]), out["text"]
+
+    def test_canonicalizer_service_protocol(self, engine, ssb_small):
+        """Untrained model: output must be either a valid signature or a
+        safe failure (never an exception) — the NLCanonicalizer contract."""
+        from repro.serving.engine import CanonicalizerService
+
+        svc = CanonicalizerService(engine, "ssb")
+        res = svc.canonicalize("total revenue by year")
+        assert res.confidence >= 0
+        assert (res.signature is None) == (res.error is not None)

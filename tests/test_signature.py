@@ -1,0 +1,110 @@
+"""Signature canonicalization invariants (unit + hypothesis properties)."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.signature import (
+    Filter, HavingClause, Measure, Signature, TimeWindow, signature_from_json,
+)
+
+
+def sig(**kw):
+    base = dict(schema="s", measures=(Measure("SUM", "f.x"),))
+    base.update(kw)
+    return Signature(**base)
+
+
+class TestCanonicalForm:
+    def test_levels_sorted(self):
+        a = sig(levels=("b.y", "a.x"))
+        b = sig(levels=("a.x", "b.y"))
+        assert a.key() == b.key()
+
+    def test_filter_order_irrelevant(self):
+        f1 = Filter("t.a", "=", "x")
+        f2 = Filter("t.b", ">", 3)
+        assert sig(filters=(f1, f2)).key() == sig(filters=(f2, f1)).key()
+
+    def test_literal_normalization(self):
+        assert Filter("t.a", "=", 3.0).val == 3
+        assert Filter("t.a", "=", "  x ").val == "x"
+        assert Filter("t.a", "in", [3, 1, 2]).val == (1, 2, 3)
+
+    def test_measure_order_significant(self):
+        m1, m2 = Measure("SUM", "f.x"), Measure("COUNT", "*")
+        assert sig(measures=(m1, m2)).key() != sig(measures=(m2, m1)).key()
+
+    def test_distinct_count_folds(self):
+        m = Measure("COUNT", "f.x", distinct=True)
+        assert m.agg == "COUNT_DISTINCT"
+        assert not m.composable()
+
+    def test_composable(self):
+        assert Measure("SUM", "f.x").composable()
+        assert Measure("MIN", "f.x").composable()
+        assert not Measure("AVG", "f.x").composable()
+
+    def test_time_window_validation(self):
+        with pytest.raises(ValueError):
+            TimeWindow("2024-02-01", "2024-01-01")
+        with pytest.raises(ValueError):
+            TimeWindow("not-a-date", "2024-01-01")
+
+    def test_requires_measure(self):
+        with pytest.raises(ValueError):
+            Signature(schema="s", measures=())
+
+    def test_unknown_agg_rejected(self):
+        with pytest.raises(ValueError):
+            Measure("MEDIAN", "f.x")
+
+    def test_json_roundtrip(self):
+        s = sig(
+            levels=("a.x",),
+            filters=(Filter("t.a", "in", ["p", "q"]),),
+            time_window=TimeWindow("2024-01-01", "2024-04-01"),
+            having=(HavingClause(0, ">", 10),),
+            limit=None,
+        )
+        s2 = signature_from_json(json.loads(s.canonical_json()))
+        assert s2.key() == s.key()
+
+    def test_scope_isolates(self):
+        assert sig(scope="tenant_a").key() != sig(scope="tenant_b").key()
+        assert sig(scope="tenant_a").key() != sig().key()
+
+
+# ----------------------------------------------------------- property tests
+
+filters_st = st.lists(
+    st.builds(
+        Filter,
+        col=st.sampled_from(["t.a", "t.b", "u.c"]),
+        op=st.sampled_from(["=", "<", ">", "<=", ">=", "!="]),
+        val=st.one_of(st.integers(-100, 100), st.text(
+            alphabet="abcxyz", min_size=1, max_size=4)),
+    ),
+    max_size=5,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(filters=filters_st, levels=st.permutations(["a.x", "b.y", "c.z"]))
+def test_permutation_invariance(filters, levels):
+    import random
+
+    shuffled = list(filters)
+    random.Random(0).shuffle(shuffled)
+    s1 = sig(filters=tuple(filters), levels=tuple(levels))
+    s2 = sig(filters=tuple(shuffled), levels=tuple(sorted(levels)))
+    assert s1.key() == s2.key()
+
+
+@settings(max_examples=60, deadline=None)
+@given(filters=filters_st)
+def test_canonical_json_deterministic(filters):
+    s1 = sig(filters=tuple(filters))
+    s2 = signature_from_json(json.loads(s1.canonical_json()))
+    assert s1.canonical_json() == s2.canonical_json()
+    assert len(s1.key()) == 64  # sha-256 hex

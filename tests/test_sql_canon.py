@@ -1,0 +1,122 @@
+"""SQL parsing + canonicalization: subset coverage, bypass triggers,
+variant unification (the paper's core SQL-side claim)."""
+import pytest
+
+from repro.core.sql_canon import CanonicalizationError, SQLCanonicalizer
+from repro.core.sqlparse import SQLSyntaxError, UnsupportedQuery, parse
+from repro.workloads.variants import make_variants
+
+
+UNSUPPORTED = [
+    "SELECT a FROM t UNION SELECT b FROM u",
+    "WITH x AS (SELECT 1) SELECT * FROM x",
+    "SELECT SUM(x) OVER (PARTITION BY y) FROM t",
+    "SELECT DISTINCT a FROM t",
+    "SELECT a FROM t LEFT JOIN u ON t.x = u.y",
+    "SELECT a FROM t WHERE x = 1 OR y = 2",
+    "SELECT a FROM t WHERE x IN (SELECT y FROM u)",
+    "SELECT a FROM t WHERE name LIKE 'x%'",
+    "SELECT MEDIAN(x) FROM t",
+]
+
+
+@pytest.mark.parametrize("sql", UNSUPPORTED)
+def test_unsupported_constructs_bypass(sql):
+    with pytest.raises(UnsupportedQuery):
+        parse(sql)
+
+
+def test_syntax_errors():
+    for sql in ["SELECT", "SELECT FROM t", "SELECT a FROM", "FROM t SELECT a"]:
+        with pytest.raises((SQLSyntaxError, UnsupportedQuery)):
+            parse(sql)
+
+
+def test_comments_and_literals():
+    q = parse("SELECT SUM(x) -- trailing\nFROM t /* block */ WHERE s = 'o''brien'")
+    assert q.where[0].right.value == "o'brien"
+
+
+class TestCanonicalization:
+    def test_variant_unification_all_workloads(self, ssb_small, tlc_small, tpcds_small):
+        """21 systematic variants -> one signature, for every intent."""
+        for wl in (ssb_small, tlc_small, tpcds_small):
+            canon = SQLCanonicalizer(wl.schema)
+            for i, intent in enumerate(wl.intents):
+                variants = make_variants(intent.sql, wl.schema, n=21, seed=i)
+                keys = {canon.canonicalize(v).key() for v in variants}
+                assert len(keys) == 1, f"{intent.id} fragmented: {len(keys)} keys"
+
+    def test_distinct_intents_distinct_keys(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        keys = [canon.canonicalize(i.sql).key() for i in ssb_small.intents]
+        assert len(set(keys)) == len(keys)
+
+    def test_time_folding_equivalence(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        a = canon.canonicalize(
+            "SELECT SUM(lo_revenue) r FROM lineorder "
+            "JOIN dates ON lineorder.lo_orderdate = dates.d_key WHERE d_year = 1994")
+        b = canon.canonicalize(
+            "SELECT SUM(lo_revenue) r FROM lineorder "
+            "JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+            "WHERE lo_date >= '1994-01-01' AND lo_date < '1995-01-01'")
+        assert a.key() == b.key()
+        assert a.time_window.start == "1994-01-01"
+
+    def test_unknown_column_rejected(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(CanonicalizationError):
+            canon.canonicalize("SELECT SUM(nonexistent) FROM lineorder")
+
+    def test_unjoined_dimension_rejected(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(CanonicalizationError):
+            canon.canonicalize(
+                "SELECT c_region, SUM(lo_revenue) r FROM lineorder GROUP BY c_region")
+
+    def test_wrong_join_path_rejected(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(CanonicalizationError):
+            canon.canonicalize(
+                "SELECT SUM(lo_revenue) r FROM lineorder "
+                "JOIN customer ON lineorder.lo_suppkey = customer.c_key")
+
+    def test_role_playing_double_join_bypasses(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(UnsupportedQuery):
+            canon.canonicalize(
+                "SELECT SUM(lo_revenue) r FROM lineorder "
+                "JOIN customer c1 ON lineorder.lo_custkey = c1.c_key "
+                "JOIN customer c2 ON lineorder.lo_custkey = c2.c_key")
+
+    def test_select_not_in_group_by_rejected(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(CanonicalizationError):
+            canon.canonicalize(
+                "SELECT c_region, c_nation, SUM(lo_revenue) r FROM lineorder "
+                "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+                "GROUP BY c_region")
+
+    def test_limit_without_order_bypasses(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(UnsupportedQuery):
+            canon.canonicalize(
+                "SELECT c_region, SUM(lo_revenue) r FROM lineorder "
+                "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+                "GROUP BY c_region LIMIT 5")
+
+    def test_agg_on_string_rejected(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        with pytest.raises(CanonicalizationError):
+            canon.canonicalize(
+                "SELECT SUM(c_region) FROM lineorder "
+                "JOIN customer ON lineorder.lo_custkey = customer.c_key")
+
+    def test_commutative_expr_unified(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema)
+        a = canon.canonicalize(
+            "SELECT SUM(lo_extendedprice * lo_discount) x FROM lineorder")
+        b = canon.canonicalize(
+            "SELECT SUM(lo_discount * lo_extendedprice) x FROM lineorder")
+        assert a.key() == b.key()
