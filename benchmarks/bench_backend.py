@@ -1,0 +1,173 @@
+"""Backend throughput benchmark: seed per-measure path vs the fused
+device-resident engine.
+
+Runs a dashboard-style multi-measure query set over SSB (default 1M fact
+rows), measures per-query latency (p50/p95) and aggregate scan throughput
+(fact rows/sec) for
+
+* ``legacy`` — the seed baseline: host numpy masks/expressions, one seg_agg
+  launch per measure, per-query re-upload (``OlapExecutor(fused=False)``);
+* ``fused``  — device-resident columns, on-device predicate masks, single
+  fused SUM/COUNT/AVG launch (+1 for MIN/MAX) per query;
+* ``batch``  — ``execute_batch`` refreshing the whole dashboard with one
+  shared scan per (levels, measures) shape.
+
+Writes ``BENCH_backend.json`` and cross-checks every fused/batch result
+against the independent numpy oracle (fp32 reduction tolerance).
+
+    PYTHONPATH=src python benchmarks/bench_backend.py            # 1M rows
+    PYTHONPATH=src python benchmarks/bench_backend.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+_JOINS = ("JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+          "JOIN customer ON lineorder.lo_custkey = customer.c_key "
+          "JOIN supplier ON lineorder.lo_suppkey = supplier.s_key "
+          "JOIN part ON lineorder.lo_partkey = part.p_key ")
+
+# A dashboard refresh: same measure block + grouping, sliced different ways,
+# plus a couple of distinct shapes (the realistic mixed case).
+_DASHBOARD = [
+    f"SELECT c_region, SUM(lo_revenue) AS rev, AVG(lo_quantity) AS q, COUNT(*) AS n "
+    f"FROM lineorder {_JOINS}WHERE d_year = {y} GROUP BY c_region"
+    for y in (1992, 1993, 1994, 1995, 1996, 1997)
+] + [
+    f"SELECT c_region, SUM(lo_revenue) AS rev, AVG(lo_quantity) AS q, COUNT(*) AS n "
+    f"FROM lineorder {_JOINS}WHERE c_region IN ('ASIA', 'EUROPE') GROUP BY c_region",
+    f"SELECT c_nation, SUM(lo_revenue) AS rev, SUM(lo_extendedprice * lo_discount) AS disc, "
+    f"COUNT(*) AS n, AVG(lo_supplycost) AS cost FROM lineorder {_JOINS}"
+    f"WHERE lo_quantity < 30 AND d_year = 1994 GROUP BY c_nation",
+    f"SELECT p_mfgr, SUM(lo_revenue) AS rev, MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi "
+    f"FROM lineorder {_JOINS}WHERE s_region = 'AMERICA' GROUP BY p_mfgr",
+]
+
+
+def _percentiles(lat_s: list[float]) -> dict:
+    a = np.asarray(lat_s) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "mean_ms": float(np.mean(a))}
+
+
+def _run_path(executor, sigs, reps: int) -> dict:
+    lat = []
+    for _ in range(reps):
+        for sig in sigs:
+            t0 = time.perf_counter()
+            executor.execute(sig)
+            lat.append(time.perf_counter() - t0)
+    total = sum(lat)
+    n_rows = executor.ds.fact.num_rows
+    return {**_percentiles(lat),
+            "queries": len(lat),
+            "total_s": total,
+            "rows_per_sec": n_rows * len(lat) / total}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=1_000_000, help="SSB fact rows")
+    ap.add_argument("--reps", type=int, default=5, help="timed passes over the query set")
+    ap.add_argument("--impl", default=None, help="seg_agg impl (default: kernel dispatch)")
+    ap.add_argument("--out", default="BENCH_backend.json")
+    ap.add_argument("--quick", action="store_true", help="CI smoke: 50k rows, 2 reps")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows, args.reps = 50_000, 2
+
+    from repro.core.sql_canon import SQLCanonicalizer
+    from repro.kernels.seg_agg.ops import kernel_impl
+    from repro.olap.executor import OlapExecutor
+    from repro.workloads import ssb
+
+    impl = args.impl or kernel_impl()
+    print(f"building SSB: {args.rows:,} fact rows ...", flush=True)
+    t0 = time.perf_counter()
+    wl = ssb.build(n_fact=args.rows, seed=0)
+    print(f"  built in {time.perf_counter() - t0:.1f}s")
+    canon = SQLCanonicalizer(wl.schema)
+    sigs = [canon.canonicalize(q) for q in _DASHBOARD]
+
+    legacy = OlapExecutor(wl.dataset, impl=impl, fused=False)
+    fused = OlapExecutor(wl.dataset, impl=impl, fused=True)
+
+    print("warmup (jit compile + device upload) ...", flush=True)
+    for sig in sigs:
+        legacy.execute(sig)
+        fused.execute(sig)
+    fused.execute_batch(sigs)
+
+    print(f"timing legacy per-measure path ({args.reps} reps x {len(sigs)} queries) ...", flush=True)
+    res_legacy = _run_path(legacy, sigs, args.reps)
+    print(f"timing fused device-resident path ...", flush=True)
+    res_fused = _run_path(fused, sigs, args.reps)
+
+    print("timing execute_batch (dashboard refresh) ...", flush=True)
+    lat = []
+    for _ in range(args.reps):
+        t0 = time.perf_counter()
+        fused.execute_batch(sigs)
+        lat.append(time.perf_counter() - t0)
+    res_batch = {**_percentiles(lat),
+                 "refreshes": len(lat),
+                 "queries_per_refresh": len(sigs),
+                 "rows_per_sec": wl.dataset.fact.num_rows * len(sigs) * len(lat) / sum(lat)}
+
+    print("cross-checking fused + batch vs numpy oracle ...", flush=True)
+    oracle = OlapExecutor(wl.dataset, impl="numpy")
+    batch_tables = fused.execute_batch(sigs)
+    mismatches = []
+    for sig, bt in zip(sigs, batch_tables):
+        expect = oracle.execute(sig)
+        # fp32 reduction tolerance: the fused path accumulates in f32
+        if not fused.execute(sig).equals(expect, rtol=1e-3):
+            mismatches.append(("fused", sig.canonical_json()))
+        if not bt.equals(expect, rtol=1e-3):
+            mismatches.append(("batch", sig.canonical_json()))
+    if mismatches:
+        raise SystemExit(f"correctness check FAILED: {mismatches[:3]}")
+
+    speedup = res_fused["rows_per_sec"] / res_legacy["rows_per_sec"]
+    batch_speedup = res_batch["rows_per_sec"] / res_legacy["rows_per_sec"]
+    report = {
+        "workload": "ssb",
+        "fact_rows": wl.dataset.fact.num_rows,
+        "queries": len(sigs),
+        "reps": args.reps,
+        "impl": impl,
+        "device_upload_ms": wl.dataset.upload_time_ms(),
+        "legacy_per_measure": res_legacy,
+        "fused_device_resident": res_fused,
+        "batch_shared_scan": res_batch,
+        "fused_speedup": speedup,
+        "batch_speedup": batch_speedup,
+        "oracle_checked": True,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    print(f"\n## backend throughput — SSB @ {wl.dataset.fact.num_rows:,} rows, impl={impl}")
+    print(f"| path | rows/sec | p50 ms | p95 ms |")
+    print(f"|---|---|---|---|")
+    for name, r in (("legacy per-measure", res_legacy),
+                    ("fused device-resident", res_fused),
+                    ("batch shared-scan", res_batch)):
+        print(f"| {name} | {r['rows_per_sec']:.3g} | {r['p50_ms']:.2f} | {r['p95_ms']:.2f} |")
+    print(f"\nfused speedup: {speedup:.2f}x   batch speedup: {batch_speedup:.2f}x")
+    print(f"wrote {args.out}")
+    if speedup < 3 and not args.quick:
+        print("WARNING: fused speedup below the 3x acceptance bar", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,9 @@
 """Benchmark harness — one function per paper table.  Prints the markdown
-report to stdout and ``name,us_per_call,derived`` CSV lines at the end."""
+report to stdout and ``name,us_per_call,derived`` CSV lines at the end.
+
+``--quick`` runs a CI smoke subset on a tiny dataset (set before any
+workload import so REPRO_BENCH_FACT_ROWS takes effect).
+"""
 from __future__ import annotations
 
 import os
@@ -7,9 +11,14 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks pkg
 
 
 def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    if quick:
+        os.environ.setdefault("REPRO_BENCH_FACT_ROWS", "2000")
+
     from benchmarks import roofline, tables
 
     sections = [
@@ -21,6 +30,8 @@ def main() -> None:
         ("rq4", tables.rq4_derivations),
         ("birdlike", tables.birdlike_eval),
     ]
+    if quick:
+        sections = [("table1", tables.table1_hitrate)]
     all_csv = []
     for name, fn in sections:
         t0 = time.perf_counter()

@@ -83,6 +83,9 @@ class SemanticCache:
         self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
         # derivation candidate index: (scope, measure multiset) -> keys
         self._by_measures: dict[tuple, list[str]] = {}
+        # reverse map key -> index bucket so eviction/invalidation unindexes
+        # in O(1) instead of scanning every bucket
+        self._index_of: dict[str, tuple] = {}
         self.stats = CacheStats()
 
     # ------------------------------------------------------------------- api
@@ -147,9 +150,9 @@ class SemanticCache:
             self._entries[key].snapshot_id = snapshot_id
             return key
         self._entries[key] = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
-        self._by_measures.setdefault(
-            (sig.scope, sig.schema, sig.measure_key()), []
-        ).append(key)
+        idx_key = (sig.scope, sig.schema, sig.measure_key())
+        self._by_measures.setdefault(idx_key, []).append(key)
+        self._index_of[key] = idx_key
         self.stats.stores += 1
         while self.capacity is not None and len(self._entries) > self.capacity:
             self._evict_lru()
@@ -182,6 +185,7 @@ class SemanticCache:
         n = len(self._entries)
         self._entries.clear()
         self._by_measures.clear()
+        self._index_of.clear()
         self.stats.invalidations += n
         return n
 
@@ -205,10 +209,17 @@ class SemanticCache:
             self._unindex(key)
 
     def _unindex(self, key: str) -> None:
-        for keys in self._by_measures.values():
-            if key in keys:
+        idx_key = self._index_of.pop(key, None)
+        if idx_key is None:
+            return
+        keys = self._by_measures.get(idx_key)
+        if keys is not None:
+            try:
                 keys.remove(key)
-                break
+            except ValueError:
+                pass
+            if not keys:
+                del self._by_measures[idx_key]
 
     # ---------------------------------------------------------- introspection
     def entry(self, key: str) -> Optional[CacheEntry]:

@@ -100,3 +100,123 @@ def seg_agg_pallas(
         interpret=interpret,
     )(values, ids[:, None], mask[:, None])
     return out[:num_groups]
+
+
+# ------------------------------------------------------------- filter-fused
+
+
+def _seg_agg_fused_kernel(values_ref, ids_ref, pred_ref, bounds_ref, out_ref,
+                          *, op: str, tg: int, nk: int, tn: int, n: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        if op == "sum":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif op == "min":
+            out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, -jnp.inf)
+
+    gb = pl.program_id(0)
+    values = values_ref[...]  # (TN, M)
+    ids = ids_ref[...][:, 0]  # (TN,)
+    pred = pred_ref[...]  # (TN, P)
+    bounds = bounds_ref[...]  # (P, 2K): [:, :K] = lo, [:, K:] = hi
+    p = pred.shape[1]
+    # build the predicate mask inside the tile (no HBM mask round-trip):
+    # AND over predicates of OR over that predicate's [lo, hi] ranges
+    # (NaN-sentinel ranges match NaN values, see ref.bounds_mask_ref).
+    # Static unrolled loops — P and K are small (dashboard filters).
+    # N-padding rows are cut by the global row-index guard.
+    mask = (nb * tn + jax.lax.broadcasted_iota(jnp.int32, (tn,), 0)) < n
+    for j in range(p):
+        x = pred[:, j]
+        mj = None
+        for k in range(nk):
+            lo, hi = bounds[j, k], bounds[j, nk + k]
+            within = ((x >= lo) & (x <= hi)) | (jnp.isnan(x) & jnp.isnan(lo))
+            mj = within if mj is None else (mj | within)
+        mask = mask & mj
+    local = ids - gb * tg
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (tn, tg), 1)) & mask[:, None]
+    if op == "sum":
+        # NaN-safe accumulate: a NaN anywhere in the tile would poison every
+        # group through 0 * NaN in the matmul, so reduce cleaned values and
+        # route NaNs to exactly the groups whose qualifying rows carry them
+        # (second matmul is ~free: the kernel is memory-bound)
+        finite = ~jnp.isnan(values)
+        vals = jnp.where(mask[:, None] & finite, values, 0.0)
+        nan_ind = (mask[:, None] & ~finite).astype(jnp.float32)
+        oh = onehot.astype(jnp.float32)
+        acc = jax.lax.dot_general(
+            oh, vals, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        hits = jax.lax.dot_general(
+            oh, nan_ind, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        out_ref[...] += acc + jnp.where(hits > 0, jnp.nan, 0.0)
+    else:
+        ident = jnp.inf if op == "min" else -jnp.inf
+        m = values.shape[1]
+        for j in range(m):
+            vj = jnp.where(onehot, values[:, j][:, None], ident)  # (TN, TG)
+            red = jnp.min(vj, axis=0) if op == "min" else jnp.max(vj, axis=0)
+            cur = out_ref[:, j]
+            out_ref[:, j] = jnp.minimum(cur, red) if op == "min" else jnp.maximum(cur, red)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "op", "tn", "tg", "interpret"))
+def seg_agg_fused_pallas(
+    values,
+    ids,
+    pred_cols,
+    bounds,
+    num_groups: int,
+    op: str = "sum",
+    tn: int = DEFAULT_TN,
+    tg: int = DEFAULT_TG,
+    interpret: bool = False,
+):
+    """Filter-fused grouped aggregation.
+
+    values (N, M) f32, ids (N,) int32, pred_cols (N, P) f32,
+    bounds (P, 2K) f32 ([:, :K] lo / [:, K:] hi inclusive range pairs, OR
+    within a predicate, AND across predicates) -> (num_groups, M) f32.
+
+    The predicate mask is built inside the Pallas tile from the encoded
+    bounds, so no (N,) mask is ever materialized in HBM.  Validated against
+    ``ref.bounds_mask_ref`` + ``ref.seg_agg_fused_ref`` in interpret mode.
+    """
+    n, m = values.shape
+    p = pred_cols.shape[1]
+    nk = bounds.shape[1] // 2
+    values = jnp.asarray(values, jnp.float32)
+    ids = jnp.asarray(ids, jnp.int32)
+    pred_cols = jnp.asarray(pred_cols, jnp.float32)
+    bounds = jnp.asarray(bounds, jnp.float32)
+    tn = min(tn, max(8, n))
+    tg = min(tg, max(8, num_groups))
+    n_pad = (-n) % tn
+    g_pad = (-num_groups) % tg
+    if n_pad:
+        # pad rows are cut in-tile by the global row-index guard
+        values = jnp.pad(values, ((0, n_pad), (0, 0)))
+        ids = jnp.pad(ids, (0, n_pad))
+        pred_cols = jnp.pad(pred_cols, ((0, n_pad), (0, 0)))
+    gp = num_groups + g_pad
+    grid = (gp // tg, (n + n_pad) // tn)
+    out = pl.pallas_call(
+        functools.partial(_seg_agg_fused_kernel, op=op, tg=tg, nk=nk, tn=tn, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, m), lambda gb, nb: (nb, 0)),
+            pl.BlockSpec((tn, 1), lambda gb, nb: (nb, 0)),
+            pl.BlockSpec((tn, p), lambda gb, nb: (nb, 0)),
+            pl.BlockSpec((p, 2 * nk), lambda gb, nb: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tg, m), lambda gb, nb: (gb, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, m), jnp.float32),
+        interpret=interpret,
+    )(values, ids[:, None], pred_cols, bounds)
+    return out[:num_groups]

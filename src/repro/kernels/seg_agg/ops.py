@@ -1,4 +1,4 @@
-"""Dispatching wrapper for grouped aggregation.
+"""Dispatching wrappers for grouped aggregation.
 
 Implementation selection (shared convention for all kernels in this repo):
 
@@ -7,17 +7,45 @@ Implementation selection (shared convention for all kernels in this repo):
 * ``REPRO_KERNELS=xla``        — pure-jnp reference (XLA lowering),
 * unset                        — pallas on TPU, xla elsewhere.
 
-The multi-pod dry-run lowers the XLA path; kernels are validated against
-ref.py in interpret mode by the test suite.
+Three entry points:
+
+* ``seg_agg``        — plain (N, M) grouped aggregation with an explicit mask
+  (the seed per-measure path keeps using this);
+* ``seg_agg_fused``  — filter-fused variant: the mask is built on-device from
+  encoded predicate range bounds (no HBM mask round-trip on the Pallas path);
+* ``seg_agg_batch``  — shared-scan batch: S signatures' bounds against one
+  value block, one kernel launch, returns (S, num_groups, M).
+
+Every dispatcher call counts as one kernel launch in a module-level probe
+(``launch_count``/``reset_launch_count``) so tests can assert the executor's
+single-launch property.  The multi-pod dry-run lowers the XLA path; kernels
+are validated against ref.py in interpret mode by the test suite.
 """
 from __future__ import annotations
 
+import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
-from .kernel import seg_agg_pallas
-from .ref import seg_agg_ref
+from .kernel import seg_agg_fused_pallas, seg_agg_pallas
+from .ref import bounds_mask_ref, seg_agg_fused_ref, seg_agg_ref
+
+_LAUNCHES = {"n": 0}
+
+
+def launch_count() -> int:
+    """Number of seg_agg dispatcher calls since the last reset (test probe)."""
+    return _LAUNCHES["n"]
+
+
+def reset_launch_count() -> None:
+    _LAUNCHES["n"] = 0
+
+
+def _record_launch() -> None:
+    _LAUNCHES["n"] += 1
 
 
 def kernel_impl() -> str:
@@ -30,8 +58,186 @@ def kernel_impl() -> str:
 def seg_agg(values, ids, mask, num_groups: int, op: str = "sum", impl: str | None = None):
     """Grouped aggregation: (N, M) values + (N,) ids -> (num_groups, M)."""
     impl = impl or kernel_impl()
+    _record_launch()
     if impl == "xla":
         return seg_agg_ref(values, ids, mask, num_groups, op)
     return seg_agg_pallas(
         values, ids, mask, num_groups, op, interpret=(impl == "interpret")
     )
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "op"))
+def _fused_ref_jit(values, ids, pred_cols, bounds, num_groups, op):
+    return seg_agg_fused_ref(values, ids, pred_cols, bounds, num_groups, op)
+
+
+def _pallas_nan_safe_sum(v, ids, num_groups, interpret):
+    """NaN-safe all-rows sum on the plain Pallas kernel: its one-hot matmul
+    spreads any NaN across the whole group tile (0 * NaN), so reduce cleaned
+    values and NaN indicators side by side in one launch, then re-poison
+    exactly the groups whose rows carried NaNs."""
+    m = v.shape[1]
+    nan = jnp.isnan(v)
+    stacked = jnp.concatenate([jnp.where(nan, 0.0, v), nan.astype(jnp.float32)], axis=1)
+    ones = jnp.ones(v.shape[0], jnp.float32)
+    both = seg_agg_pallas(stacked, ids, ones, num_groups, "sum", interpret=interpret)
+    return both[:, :m] + jnp.where(both[:, m:] > 0, jnp.nan, 0.0)
+
+
+def _rect_reduce(values, mask, rect_idx, op):
+    """Gather-based segment reduce over a precomputed (G, R) row-index
+    rectangle (rows of group g, padded with out-of-range indices).  Avoids
+    XLA's serial scatter on CPU — the hot reduce becomes a vectorized gather
+    + axis reduce — and tree-reduces instead of sequentially accumulating
+    (tighter f32 error).  Pad cells read mask=False, so they contribute the
+    op identity; NaNs stay confined to their own group cell."""
+    mrect = jnp.take(mask, rect_idx, axis=0, mode="fill", fill_value=False)
+    vrect = jnp.take(values, rect_idx, axis=0, mode="fill", fill_value=0.0)
+    if op == "sum":
+        return jnp.sum(jnp.where(mrect[..., None], vrect, 0.0), axis=1)
+    ident = jnp.inf if op == "min" else -jnp.inf
+    vrect = jnp.where(mrect[..., None], vrect, ident)
+    return jnp.min(vrect, axis=1) if op == "min" else jnp.max(vrect, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def _fused_rect_jit(values, pred_cols, bounds, rect_idx, op):
+    mask = bounds_mask_ref(pred_cols, bounds)
+    return _rect_reduce(jnp.asarray(values, jnp.float32), mask, rect_idx, op)
+
+
+def seg_agg_fused(values, ids, pred_cols, bounds, num_groups: int,
+                  op: str = "sum", impl: str | None = None, rect_idx=None):
+    """Filter-fused grouped aggregation (single launch).
+
+    values (N, M), ids (N,), pred_cols (N, P) f32, bounds (P, K, 2) f32
+    inclusive [lo, hi] ranges (OR over K, AND over P) -> (num_groups, M).
+    With P == 0 (no predicates) this degrades to a plain all-rows reduce.
+    ``rect_idx`` (optional, XLA path) is a cached (num_groups, R) row-index
+    rectangle for these ids; when given, the reduce is gather-based instead
+    of scatter-based (much faster on CPU backends).
+    """
+    impl = impl or kernel_impl()
+    _record_launch()
+    p = int(bounds.shape[0])
+    if impl == "xla":
+        b = jnp.asarray(bounds, jnp.float32)
+        if rect_idx is not None:
+            return _fused_rect_jit(values, pred_cols, b, rect_idx, op)
+        return _fused_ref_jit(values, ids, pred_cols, b, num_groups, op)
+    if p == 0:
+        interp = impl == "interpret"
+        if op == "sum":
+            return _p0_sum_jit(jnp.asarray(values, jnp.float32),
+                               jnp.asarray(ids, jnp.int32), num_groups, interp)
+        # min/max select through the one-hot: NaNs stay in their own group
+        ones = jnp.ones(values.shape[0], jnp.float32)
+        return seg_agg_pallas(values, ids, ones, num_groups, op,
+                              interpret=interp)
+    b = jnp.asarray(bounds, jnp.float32)
+    flat = jnp.concatenate([b[:, :, 0], b[:, :, 1]], axis=1)  # (P, 2K)
+    return seg_agg_fused_pallas(values, ids, pred_cols, flat, num_groups, op,
+                                interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "interpret"))
+def _p0_sum_jit(values, ids, num_groups, interpret):
+    return _pallas_nan_safe_sum(values, ids, num_groups, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def _batch_rect_jit(values, pred_cols, bounds, rect_idx, op):
+    values = jnp.asarray(values, jnp.float32)
+    return jnp.stack([
+        _rect_reduce(values, bounds_mask_ref(pred_cols, bounds[i]), rect_idx, op)
+        for i in range(bounds.shape[0])
+    ])
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def _masked_rect_jit(values, mask, rect_idx, op):
+    return _rect_reduce(jnp.asarray(values, jnp.float32), mask > 0.5, rect_idx, op)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "op", "impl"))
+def _masked_jit(values, ids, mask, num_groups, op, impl):
+    values = jnp.asarray(values, jnp.float32)
+    sel = mask > 0.5
+    if op == "sum":
+        v = jnp.where(sel[:, None], values, 0.0)
+        if impl == "xla":
+            return jax.ops.segment_sum(v, ids, num_segments=num_groups)
+        return _pallas_nan_safe_sum(v, ids, num_groups, impl == "interpret")
+    ident = jnp.inf if op == "min" else -jnp.inf
+    v = jnp.where(sel[:, None], values, ident)
+    if impl == "xla":
+        seg = jax.ops.segment_min if op == "min" else jax.ops.segment_max
+        return seg(v, ids, num_segments=num_groups)
+    ones = jnp.ones(values.shape[0], jnp.float32)
+    return seg_agg_pallas(v, ids, ones, num_groups, op,
+                          interpret=(impl == "interpret"))
+
+
+def seg_agg_masked(values, ids, mask, num_groups: int, op: str = "sum",
+                   impl: str | None = None, rect_idx=None):
+    """Fused grouped aggregation with an explicit row mask (single launch).
+
+    Same NaN contract as ``seg_agg_fused`` (masked-out rows contribute the
+    op identity; NaNs stay in their own group — unlike the seed ``seg_agg``,
+    whose mask-multiply lets masked-out NaNs poison their group).  Used when
+    predicates need exact host-side evaluation (values outside the f32-exact
+    range) but the aggregation should stay fused and device-side.
+    """
+    impl = impl or kernel_impl()
+    _record_launch()
+    mask = jnp.asarray(mask, jnp.float32)
+    if impl == "xla" and rect_idx is not None:
+        return _masked_rect_jit(values, mask, rect_idx, op)
+    return _masked_jit(values, ids, mask, num_groups, op, impl)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "op", "impl"))
+def _batch_jit(values, ids, pred_cols, bounds, num_groups, op, impl):
+    s = bounds.shape[0]
+    n, m = values.shape
+    masks = jnp.stack(
+        [bounds_mask_ref(pred_cols, bounds[i]) for i in range(s)], axis=1
+    )  # (N, S)
+    if op == "sum":
+        v = jnp.where(masks[:, :, None], values[:, None, :], 0.0)
+    else:
+        ident = jnp.inf if op == "min" else -jnp.inf
+        v = jnp.where(masks[:, :, None], values[:, None, :], ident)
+    v = v.reshape(n, s * m)
+    if impl == "xla":
+        seg = {"sum": jax.ops.segment_sum, "min": jax.ops.segment_min,
+               "max": jax.ops.segment_max}[op]
+        out = seg(v, ids, num_segments=num_groups)
+    elif op == "sum":
+        out = _pallas_nan_safe_sum(v, ids, num_groups, impl == "interpret")
+    else:
+        # min/max select through the one-hot, so NaNs stay in their own group
+        ones = jnp.ones(n, jnp.float32)
+        out = seg_agg_pallas(v, ids, ones, num_groups, op,
+                             interpret=(impl == "interpret"))
+    return out.reshape(num_groups, s, m).transpose(1, 0, 2)
+
+
+def seg_agg_batch(values, ids, pred_cols, bounds, num_groups: int,
+                  op: str = "sum", impl: str | None = None, rect_idx=None):
+    """Shared-scan batched aggregation for S signatures (one launch).
+
+    values (N, M), ids (N,), pred_cols (N, P) over the union of the batch's
+    predicate columns, bounds (S, P, K, 2) per-signature ranges ->
+    (S, num_groups, M).  Rows are scanned once; each signature's mask selects
+    its slice of the expanded value block.  Masked-out rows are replaced by
+    the op identity before reducing (NaN-safe, same contract as
+    ``seg_agg_fused``).  ``rect_idx`` as in ``seg_agg_fused``.
+    """
+    impl = impl or kernel_impl()
+    _record_launch()
+    if impl == "xla" and rect_idx is not None:
+        return _batch_rect_jit(values, jnp.asarray(pred_cols, jnp.float32),
+                               jnp.asarray(bounds, jnp.float32), rect_idx, op)
+    return _batch_jit(values, ids, jnp.asarray(pred_cols, jnp.float32),
+                      jnp.asarray(bounds, jnp.float32), num_groups, op, impl)

@@ -26,3 +26,51 @@ def seg_agg_ref(values, ids, mask, num_groups: int, op: str = "sum"):
         v = jnp.where(mask[:, None] > 0.5, values, -jnp.inf)
         return jax.ops.segment_max(v, ids, num_segments=num_groups)
     raise ValueError(f"unknown op {op!r}")
+
+
+def bounds_mask_ref(pred_cols, bounds):
+    """Predicate mask from encoded range bounds (the filter-fused oracle).
+
+    pred_cols: (N, P) f32 fact-aligned physical predicate columns;
+    bounds: (P, K, 2) f32, a disjunction of K inclusive [lo, hi] ranges per
+    predicate.  A row qualifies iff every predicate has some range containing
+    its value (CNF over ranges: ``=`` is [v,v], ``<=`` is [-inf,v], IN-lists
+    are one range per member).  Special ranges:
+
+    * pad (lo=+inf, hi=-inf): never matches;
+    * NaN sentinel (lo=hi=NaN): matches exactly the NaN column values.
+      ``!=`` encodes as two open ranges *plus* the sentinel (numpy
+      semantics: ``NaN != v`` is True), and batch fillers for columns a
+      signature doesn't constrain as [(-inf, inf)] plus the sentinel (no
+      filter at all accepts every row);
+    * ordinary comparison ranges reject NaN values, matching numpy.
+    """
+    pred_cols = jnp.asarray(pred_cols, jnp.float32)
+    if pred_cols.shape[1] == 0:
+        return jnp.ones(pred_cols.shape[0], dtype=bool)
+    bounds = jnp.asarray(bounds, jnp.float32)
+    x = pred_cols[:, :, None]  # (N, P, 1)
+    lo = bounds[None, :, :, 0]  # (1, P, K)
+    hi = bounds[None, :, :, 1]
+    within = ((x >= lo) & (x <= hi)) | (jnp.isnan(x) & jnp.isnan(lo))
+    return jnp.all(jnp.any(within, axis=-1), axis=-1)
+
+
+def seg_agg_fused_ref(values, ids, pred_cols, bounds, num_groups: int, op: str = "sum"):
+    """Filter-fused oracle: build the mask from encoded bounds, then do a
+    NaN-safe masked segment reduce.  Unlike ``seg_agg_ref`` (which multiplies
+    by the mask, so NaNs in masked-out rows poison their group), masked-out
+    rows are replaced by the op identity *before* reducing — a NaN only
+    reaches a group if a qualifying row carries it, matching the host oracle.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    mask = bounds_mask_ref(pred_cols, bounds)
+    if op == "sum":
+        v = jnp.where(mask[:, None], values, 0.0)
+        return jax.ops.segment_sum(v, ids, num_segments=num_groups)
+    ident = jnp.inf if op == "min" else -jnp.inf
+    v = jnp.where(mask[:, None], values, ident)
+    seg = jax.ops.segment_min if op == "min" else jax.ops.segment_max
+    if op not in ("min", "max"):
+        raise ValueError(f"unknown op {op!r}")
+    return seg(v, ids, num_segments=num_groups)

@@ -5,7 +5,7 @@ backend's direct execution of the requested signature — zero false hits.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import SemanticCache, Signature, Measure, Filter, TimeWindow
 from repro.core.sql_canon import SQLCanonicalizer

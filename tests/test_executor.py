@@ -1,8 +1,8 @@
 """OLAP executor: numpy oracle vs seg_agg (XLA + interpret) paths, and
 SQL-semantics corner cases."""
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+import pytest  # noqa: F401
+from _hyp import given, settings, st
 
 from repro.core.sql_canon import SQLCanonicalizer
 from repro.olap.executor import OlapExecutor

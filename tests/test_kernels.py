@@ -39,6 +39,72 @@ def test_seg_agg_dtypes():
         np.testing.assert_allclose(out, ref, rtol=1e-2, atol=1e-2)
 
 
+# ------------------------------------------------------ seg_agg filter-fused
+
+
+def _rand_bounds(p, k, lo=0, hi=10):
+    """Random (P, K, 2) inclusive range bounds with some never-match pads."""
+    b = np.empty((p, k, 2), np.float32)
+    b[..., 0], b[..., 1] = np.inf, -np.inf
+    for i in range(p):
+        for j in range(rng.integers(1, k + 1)):
+            a = rng.integers(lo, hi, size=2)
+            b[i, j] = (min(a), max(a))
+    return b
+
+
+@pytest.mark.parametrize("n,m,g,p,k", [(512, 1, 16, 1, 1), (1000, 3, 17, 2, 2),
+                                       (777, 2, 100, 3, 2), (64, 4, 5, 1, 4)])
+@pytest.mark.parametrize("op", ["sum", "min", "max"])
+def test_seg_agg_fused(n, m, g, p, k, op):
+    """Filter-fused kernel (mask built in-tile from bounds) vs fused oracle,
+    interpret mode, including NaN-bearing values."""
+    from repro.kernels.seg_agg.kernel import seg_agg_fused_pallas
+    from repro.kernels.seg_agg.ref import seg_agg_fused_ref
+
+    vals = rng.normal(size=(n, m)).astype(np.float32)
+    vals[rng.random((n, m)) < 0.02] = np.nan
+    ids = rng.integers(0, g, size=n).astype(np.int32)
+    pred = rng.integers(0, 10, size=(n, p)).astype(np.float32)
+    bounds = _rand_bounds(p, k)
+    ref = np.asarray(seg_agg_fused_ref(vals, ids, pred, bounds, g, op))
+    flat = np.concatenate([bounds[:, :, 0], bounds[:, :, 1]], axis=1)
+    out = np.asarray(seg_agg_fused_pallas(vals, ids, pred, flat, g, op, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_bounds_mask_matches_numpy():
+    from repro.kernels.seg_agg.ref import bounds_mask_ref
+
+    n, p = 2000, 3
+    pred = rng.integers(-5, 15, size=(n, p)).astype(np.float32)
+    bounds = _rand_bounds(p, 2, lo=-5, hi=15)
+    expect = np.ones(n, bool)
+    for i in range(p):
+        any_i = np.zeros(n, bool)
+        for j in range(2):
+            lo, hi = bounds[i, j]
+            any_i |= (pred[:, i] >= lo) & (pred[:, i] <= hi)
+        expect &= any_i
+    got = np.asarray(bounds_mask_ref(pred, bounds))
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_seg_agg_fused_empty_mask():
+    """All-never bounds: sums are zero, mins stay at the identity."""
+    from repro.kernels.seg_agg.ref import seg_agg_fused_ref
+
+    vals = rng.normal(size=(128, 2)).astype(np.float32)
+    ids = rng.integers(0, 7, size=128).astype(np.int32)
+    pred = np.zeros((128, 1), np.float32)
+    bounds = np.full((1, 1, 2), 0, np.float32)
+    bounds[..., 0], bounds[..., 1] = np.inf, -np.inf
+    out = np.asarray(seg_agg_fused_ref(vals, ids, pred, bounds, 7, "sum"))
+    np.testing.assert_array_equal(out, np.zeros((7, 2), np.float32))
+    out = np.asarray(seg_agg_fused_ref(vals, ids, pred, bounds, 7, "min"))
+    np.testing.assert_array_equal(out, np.full((7, 2), np.inf, np.float32))
+
+
 # --------------------------------------------------------------- flash attn
 
 

@@ -2,7 +2,7 @@
 import json
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.signature import (
     Filter, HavingClause, Measure, Signature, TimeWindow, signature_from_json,
