@@ -1,0 +1,168 @@
+"""Service-layer benchmark: single-request vs batched dashboard refresh.
+
+A 12-tile dashboard (shared grouping + measure block, differing filters and
+time windows) refreshes against a cold cache through the batch-first
+``CacheService``:
+
+* ``serial``  — one ``submit()`` per tile: every miss pays its own
+  canonicalize -> lookup -> execute round trip (the pre-service request
+  path, one fused backend execution per tile);
+* ``batched`` — one ``submit_batch()`` for the whole refresh: the miss
+  planner dedups in-flight intents and routes all misses through
+  ``OlapExecutor.execute_batch`` — one shared scan and a single fused
+  ``seg_agg_batch_blocks`` launch (SUM + MIN/MAX blocks together) for the
+  entire dashboard.
+
+Reports per-request p50/p95, refresh wall time, and backend *launch counts*
+(the seg_agg dispatcher probe), cross-checks batched tables against the
+independent numpy oracle, and writes ``BENCH_service.json``.
+
+    PYTHONPATH=src python benchmarks/bench_service.py            # 500k rows
+    PYTHONPATH=src python benchmarks/bench_service.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+_JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+          "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+_BASE = ("SELECT c_region, SUM(lo_revenue) AS rev, AVG(lo_quantity) AS q, "
+         "COUNT(*) AS n, MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi "
+         f"FROM lineorder {_JOINS}")
+
+# 12 tiles: shared grouping + measures, differing filters/time windows
+DASHBOARD = (
+    [_BASE + f"WHERE d_year = {y} GROUP BY c_region"
+     for y in (1992, 1993, 1994, 1995, 1996, 1997)]
+    + [_BASE + f"WHERE lo_date >= '{a}' AND lo_date < '{b}' GROUP BY c_region"
+       for a, b in (("1992-01-01", "1992-07-01"), ("1993-02-01", "1994-02-01"),
+                    ("1995-06-01", "1996-06-01"))]
+    + [_BASE + f"WHERE lo_quantity {op} GROUP BY c_region"
+       for op in ("< 10", "< 25", "> 40")]
+)
+
+
+def _percentiles(lat_s: list[float]) -> dict:
+    a = np.asarray(lat_s) * 1e3
+    return {"p50_ms": float(np.percentile(a, 50)),
+            "p95_ms": float(np.percentile(a, 95)),
+            "mean_ms": float(np.mean(a))}
+
+
+def _fresh_service(wl, backend):
+    from repro.core import SemanticCache
+    from repro.service import CacheService
+
+    svc = CacheService()
+    tenant = svc.register_tenant(
+        "dash", schema=wl.schema, backend=backend,
+        cache=SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper()))
+    return svc, tenant
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=500_000, help="SSB fact rows")
+    ap.add_argument("--reps", type=int, default=5,
+                    help="timed cold-cache refreshes per path")
+    ap.add_argument("--impl", default=None, help="seg_agg impl (default: kernel dispatch)")
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--quick", action="store_true", help="CI smoke: 30k rows, 2 reps")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows, args.reps = 30_000, 2
+
+    from repro.kernels.seg_agg.ops import (kernel_impl, launch_count,
+                                           reset_launch_count)
+    from repro.olap.executor import OlapExecutor
+    from repro.service import QueryRequest
+    from repro.workloads import ssb
+
+    impl = args.impl or kernel_impl()
+    print(f"building SSB: {args.rows:,} fact rows ...", flush=True)
+    t0 = time.perf_counter()
+    wl = ssb.build(n_fact=args.rows, seed=0)
+    print(f"  built in {time.perf_counter() - t0:.1f}s")
+
+    backend = OlapExecutor(wl.dataset, impl=impl, fused=True)
+    reqs = [QueryRequest(sql=q, tenant="dash") for q in DASHBOARD]
+
+    # correctness first: batched-served misses must equal the numpy oracle
+    print("oracle cross-check (batched vs independent numpy path) ...", flush=True)
+    svc, _ = _fresh_service(wl, backend)
+    results = svc.submit_batch(reqs)
+    oracle = OlapExecutor(wl.dataset, impl="numpy")
+    for r in results:
+        direct = oracle.execute(r.signature)
+        if not r.table.equals(direct, ordered=bool(r.signature.order_by)):
+            raise SystemExit(f"MISMATCH vs oracle for {r.signature.key()[:12]}")
+    print(f"  ok ({len(results)} tiles, all served via "
+          f"{'batch' if all(x.batched for x in results) else 'mixed'} execution)")
+
+    # warmup: jit compile + device upload (shared by both paths)
+    svc, _ = _fresh_service(wl, backend)
+    for r in reqs:
+        svc.submit(r)
+
+    print(f"timing serial refresh ({args.reps} cold-cache reps x "
+          f"{len(reqs)} tiles) ...", flush=True)
+    serial_lat, serial_refresh, serial_launches = [], [], []
+    for _ in range(args.reps):
+        svc, _ = _fresh_service(wl, backend)
+        reset_launch_count()
+        t0 = time.perf_counter()
+        for r in reqs:
+            t1 = time.perf_counter()
+            svc.submit(r)
+            serial_lat.append(time.perf_counter() - t1)
+        serial_refresh.append(time.perf_counter() - t0)
+        serial_launches.append(launch_count())
+
+    print("timing batched refresh (submit_batch) ...", flush=True)
+    batch_refresh, batch_launches, batch_stats = [], [], None
+    for _ in range(args.reps):
+        svc, tenant = _fresh_service(wl, backend)
+        reset_launch_count()
+        t0 = time.perf_counter()
+        svc.submit_batch(reqs)
+        batch_refresh.append(time.perf_counter() - t0)
+        batch_launches.append(launch_count())
+        batch_stats = tenant.stats.to_dict()
+
+    n = len(reqs)
+    serial_total = float(np.mean(serial_refresh))
+    batch_total = float(np.mean(batch_refresh))
+    report = {
+        "rows": args.rows,
+        "tiles": n,
+        "impl": impl,
+        "reps": args.reps,
+        "serial": {**_percentiles(serial_lat),
+                   "refresh_ms": serial_total * 1e3,
+                   "launches_per_refresh": float(np.mean(serial_launches))},
+        "batched": {**_percentiles([t / n for t in batch_refresh]),
+                    "refresh_ms": batch_total * 1e3,
+                    "launches_per_refresh": float(np.mean(batch_launches))},
+        "speedup_refresh": serial_total / batch_total if batch_total else 0.0,
+        "service_stats_last_batched_refresh": batch_stats,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps({k: report[k] for k in
+                      ("serial", "batched", "speedup_refresh")}, indent=2))
+    print(f"wrote {args.out}: {n}-tile refresh "
+          f"{serial_total * 1e3:.1f}ms serial -> {batch_total * 1e3:.1f}ms batched "
+          f"({report['speedup_refresh']:.1f}x), launches "
+          f"{np.mean(serial_launches):.0f} -> {np.mean(batch_launches):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,  # noqa: E402
-                        SemanticCacheMiddleware, SimulatedLLM)
+                        SimulatedLLM)
 from repro.core import sqlparse as sp  # noqa: E402
+from repro.service import CacheService, QueryRequest  # noqa: E402
 from repro.core.signature import Signature  # noqa: E402
 from repro.core.sql_canon import CanonicalizationError  # noqa: E402
 from repro.olap.executor import OlapExecutor  # noqa: E402
@@ -236,17 +237,22 @@ def run_method(method: str, wl, queries, model: str = "gpt-4o-mini",
         res.distinct_keys = len(cache.store)
         return res
 
-    # ---- llmsig: the full middleware
+    # ---- llmsig: the full pipeline, through the batch-first service API
     backend = OlapExecutor(wl.dataset, impl="numpy")
     oracle = OlapExecutor(wl.dataset, impl="numpy") if audit_false_hits else None
     cache = SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper())
     llm = MemoizedNL(SimulatedLLM(wl.vocab, model=model))
-    mw = SemanticCacheMiddleware(
-        wl.schema, backend, cache, nl=llm,
+    svc = CacheService()
+    svc.register_tenant(
+        "bench", schema=wl.schema, backend=backend, cache=cache, nl=llm,
         policy=SafetyPolicy.balanced(wl.spatial_ambiguous, qualified=QUALIFIED))
     for q in queries:
-        r = mw.query_sql(q.text) if q.kind == "sql" else mw.query_nl(q.text)
-        res.lookup_ms.append(r.lookup_ms + r.canon_ms)
+        req = (QueryRequest(sql=q.text, tenant="bench") if q.kind == "sql"
+               else QueryRequest(nl=q.text, tenant="bench"))
+        r = svc.submit(req)
+        t = r.timings_ms
+        res.lookup_ms.append(t.get("lookup", 0.0) + t.get("canonicalize", 0.0)
+                             + t.get("validate", 0.0))
         res.sql_queries += 1
         if r.hit:
             res.hits += 1

@@ -192,19 +192,22 @@ def table4_overhead():
 
 
 def _run_llmsig_capacity(wl, queries, capacity):
-    from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,
-                            SemanticCacheMiddleware, SimulatedLLM)
+    from repro.core import MemoizedNL, SafetyPolicy, SemanticCache, SimulatedLLM
     from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService, QueryRequest
 
     backend = OlapExecutor(wl.dataset, impl="numpy")
     cache = SemanticCache(wl.schema, capacity=capacity,
                           level_mapper=wl.dataset.level_mapper())
-    mw = SemanticCacheMiddleware(
-        wl.schema, backend, cache, nl=MemoizedNL(SimulatedLLM(wl.vocab, model="oracle")),
+    svc = CacheService()
+    svc.register_tenant(
+        schema=wl.schema, backend=backend, cache=cache,
+        nl=MemoizedNL(SimulatedLLM(wl.vocab, model="oracle")),
         policy=SafetyPolicy.balanced(wl.spatial_ambiguous, qualified=QUALIFIED))
     hits = 0
     for q in queries:
-        r = mw.query_sql(q.text) if q.kind == "sql" else mw.query_nl(q.text)
+        r = svc.submit(QueryRequest(sql=q.text) if q.kind == "sql"
+                       else QueryRequest(nl=q.text))
         hits += r.hit
     return hits / len(queries)
 
@@ -269,8 +272,9 @@ def table5_profiles():
 
 
 def rq4_derivations():
-    from repro.core import SemanticCache, SemanticCacheMiddleware
+    from repro.core import SemanticCache
     from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService, QueryRequest
     from repro.workloads import hierarchical
 
     wl = get_workload("ssb")
@@ -285,11 +289,12 @@ def rq4_derivations():
         cache = SemanticCache(wl.schema, enable_rollup=enabled,
                               enable_filterdown=enabled,
                               level_mapper=wl.dataset.level_mapper())
-        mw = SemanticCacheMiddleware(wl.schema, backend, cache)
+        svc = CacheService()
+        svc.register_tenant(schema=wl.schema, backend=backend, cache=cache)
         hits = fh = 0
         t0 = time.perf_counter()
         for q in stream:
-            r = mw.query_sql(q.text)
+            r = svc.submit(QueryRequest(sql=q.text))
             if r.hit:
                 hits += 1
                 if not r.table.equals(oracle.execute(r.signature)):

@@ -1,6 +1,8 @@
-"""Dashboard session replay: a BI tool, a notebook, and an NL interface all
-hitting the same middleware over NYC TLC data — the paper's cross-client
-fragmentation story, plus LRU behaviour under a Zipf request mix.
+"""Dashboard session replay on the batch-first service API: a BI tool, a
+notebook, and an NL interface all hitting one CacheService tenant over NYC
+TLC data — the paper's cross-client fragmentation story, plus LRU behaviour
+under a Zipf request mix.  Requests arrive in refresh-sized batches, so each
+wave's cache misses are deduped and executed as one shared backend scan.
 
     PYTHONPATH=src python examples/dashboard_session.py
 """
@@ -10,38 +12,51 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (MemoizedNL, SafetyPolicy, SemanticCache,
-                        SemanticCacheMiddleware, SimulatedLLM)
+                        SimulatedLLM)
 from repro.olap.executor import OlapExecutor
+from repro.service import CacheService, QueryRequest
 from repro.workloads import nyc_tlc
+
+REFRESH = 8  # tiles per dashboard refresh wave
 
 wl = nyc_tlc.build(n_fact=60_000)
 backend = OlapExecutor(wl.dataset)
 cache = SemanticCache(wl.schema, capacity=10,  # ~half the intent set: LRU visible
                       level_mapper=wl.dataset.level_mapper())
-mw = SemanticCacheMiddleware(
-    wl.schema, backend, cache,
+svc = CacheService()
+tenant = svc.register_tenant(
+    "tlc", schema=wl.schema, backend=backend, cache=cache,
     nl=MemoizedNL(SimulatedLLM(wl.vocab, model="gpt-4o-mini")),
     policy=SafetyPolicy.balanced(
         wl.spatial_ambiguous,
         qualified=("pickup zone", "dropoff zone", "pickup borough", "dropoff borough")))
 
 stream = wl.queries(order="zipf", seed=7)[:400]
-for q in stream:
-    if q.kind == "sql":
-        mw.query_sql(q.text)
-    else:
-        mw.query_nl(q.text)
+reqs = [QueryRequest(sql=q.text, tenant="tlc") if q.kind == "sql"
+        else QueryRequest(nl=q.text, tenant="tlc") for q in stream]
+for i in range(0, len(reqs), REFRESH):
+    svc.submit_batch(reqs[i:i + REFRESH])
 
 s = cache.stats
-print(f"zipf dashboard mix over {len(stream)} requests, cache capacity 10 intents")
-print(f"  hit rate        : {s.hit_rate():.3f}")
+t = tenant.stats
+print(f"zipf dashboard mix over {len(stream)} requests, "
+      f"waves of {REFRESH}, cache capacity 10 intents")
+print(f"  hit rate        : {s.hit_rate:.3f}")
 print(f"  exact / rollup  : {s.hits_exact} / {s.hits_rollup}")
 print(f"  cross-surface   : {s.cross_surface_hits} (NL served by SQL-seeded entries or v.v.)")
 print(f"  evictions       : {s.evictions} (LRU)")
+print(f"  batched misses  : {t.batched_misses} (served by shared execute_batch scans)")
+print(f"  deduped in-batch: {t.deduped_misses} (identical in-flight intents coalesced)")
 print(f"  backend executes: {backend.executions} "
       f"({backend.rows_scanned:,} fact rows scanned vs "
       f"{len(stream) * wl.dataset.fact.num_rows:,} without the cache)")
 
 # data refresh: new partition arrives -> open/intersecting windows invalidated
-dropped = cache.invalidate_snapshot("2024-12-01", "2025-01-01")
+dropped = svc.advance_snapshot("tlc", "snap1", "2024-12-01", "2025-01-01")
 print(f"  invalidated on refresh of [2024-12-01, 2025-01-01): {dropped} entries")
+
+# warm the next day's dashboard through the same pipeline the live path uses
+warmed = svc.warm(reqs[:REFRESH])
+print(f"  warm({REFRESH} tiles)  : "
+      f"{sum(1 for r in warmed if r.status == 'miss')} re-executed, "
+      f"{sum(1 for r in warmed if r.hit)} already present")

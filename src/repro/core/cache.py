@@ -44,16 +44,29 @@ class CacheStats:
     cross_surface_hits: int = 0  # NL request served by SQL-seeded entry or v.v.
     nl_hits: int = 0
 
+    @property
     def hits(self) -> int:
         return (self.hits_exact + self.hits_rollup + self.hits_filterdown
                 + self.hits_compose)
 
+    @property
     def lookups(self) -> int:
-        return self.hits() + self.misses
+        return self.hits + self.misses
 
+    @property
     def hit_rate(self) -> float:
-        n = self.lookups()
-        return self.hits() / n if n else 0.0
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    def to_dict(self) -> dict:
+        """Serializable counter snapshot (fields + derived totals) for the
+        service stats endpoints — the derived values are materialized here
+        so ``json.dumps`` can never silently emit a bound method."""
+        d = dataclasses.asdict(self)
+        d["hits"] = self.hits
+        d["lookups"] = self.lookups
+        d["hit_rate"] = self.hit_rate
+        return d
 
 
 @dataclasses.dataclass

@@ -1,29 +1,41 @@
-"""The semantic caching middleware — end-to-end request path (§3.2).
+"""Back-compat middleware shims over the batch-first service (§3.2).
 
-For each request: (1) canonicalize into an intent signature, (2) validate
-against schema and safety rules, (3) look up the signature hash in the cache
-(exact, then roll-up / filter-down derivations), (4) on a miss execute on the
-backend and store the result under the signature.  Validation failures bypass
-the cache and execute directly — the system never returns incorrect results
-for unsupported patterns.  Every decision is auditable via the returned
-:class:`Response`.
+The end-to-end request path — canonicalize, validate, NL-gate, cache lookup
+(exact, then roll-up / filter-down derivations), miss execution, store —
+lives in the staged pipeline of :mod:`repro.service`.  This module keeps the
+original one-schema, one-query surface (``query_sql`` / ``query_nl`` and the
+:class:`Response` envelope) as thin shims that submit one-element batches to
+a single-tenant :class:`CacheService`, so existing call sites keep working
+unchanged while new code talks to the service directly.
 """
 from __future__ import annotations
 
 import dataclasses
 import datetime as _dt
-import time
-from typing import Optional, Protocol
+from typing import TYPE_CHECKING, Optional, Protocol
 
-from .cache import LookupResult, SemanticCache
-from .nl_canon import NLCanonicalizer, NLResult
-from .safety import SafetyPolicy, gate_nl, verify_hit_time_window
+from .cache import SemanticCache
+from .nl_canon import NLCanonicalizer
+from .safety import SafetyPolicy
 from .schema import StarSchema
 from .signature import Signature
-from .sql_canon import CanonicalizationError, SQLCanonicalizer
-from .sqlparse import SQLSyntaxError, UnsupportedQuery
 from .table import ResultTable
-from .validator import SignatureValidator
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..service.api import QueryResult
+
+
+def __getattr__(name: str):
+    # Back-compat alias: the service-level per-tenant stats carry the
+    # original MiddlewareStats fields (bypasses, nl_gated,
+    # backend_executions) and more.  Resolved lazily — the service package
+    # imports core submodules, so a module-level import here would be
+    # circular when repro.service loads first.
+    if name == "MiddlewareStats":
+        from ..service.api import TenantStats
+
+        return TenantStats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 class Backend(Protocol):
@@ -53,14 +65,22 @@ class Response:
         return self.status.startswith("hit")
 
 
-@dataclasses.dataclass
-class MiddlewareStats:
-    bypasses: int = 0
-    nl_gated: int = 0
-    backend_executions: int = 0
+def _to_response(qr: "QueryResult") -> Response:
+    t = qr.timings_ms
+    return Response(
+        status=qr.status, table=qr.table, signature=qr.signature,
+        origin=qr.origin, bypass_reason=qr.bypass_reason,
+        confidence=qr.confidence,
+        lookup_ms=t.get("lookup", 0.0),
+        backend_ms=t.get("execute", 0.0),
+        canon_ms=t.get("canonicalize", 0.0) + t.get("validate", 0.0),
+        source_origin=qr.source_origin,
+    )
 
 
 class SemanticCacheMiddleware:
+    """One-tenant facade over :class:`repro.service.CacheService`."""
+
     def __init__(
         self,
         schema: StarSchema,
@@ -70,107 +90,46 @@ class SemanticCacheMiddleware:
         policy: SafetyPolicy = SafetyPolicy(),
         snapshot_id: str = "snap0",
     ):
+        from ..service.service import CacheService
+
         self.schema = schema
-        self.backend = backend
-        self.cache = cache
-        self.nl = nl
-        self.policy = policy
-        self.snapshot_id = snapshot_id
-        self.sql_canon = SQLCanonicalizer(schema)
-        self.validator = SignatureValidator(schema)
-        self.stats = MiddlewareStats()
+        self.service = CacheService()
+        self._tenant = self.service.register_tenant(
+            schema=schema, backend=backend, cache=cache, nl=nl,
+            policy=policy, snapshot_id=snapshot_id)
+        self.sql_canon = self._tenant.sql_canon
+        self.validator = self._tenant.validator
+        self.stats = self._tenant.stats
+
+    # The pre-service middleware read these per request, so reassigning
+    # them (mw.policy = ..., tests swapping backends) must keep taking
+    # effect: forward everything to the live tenant record.
+    def _tenant_attr(name: str):  # noqa: N805 — descriptor factory
+        def get(self):
+            return getattr(self._tenant, name)
+
+        def set_(self, value):
+            setattr(self._tenant, name, value)
+
+        return property(get, set_)
+
+    backend = _tenant_attr("backend")
+    cache = _tenant_attr("cache")
+    nl = _tenant_attr("nl")
+    policy = _tenant_attr("policy")
+    snapshot_id = _tenant_attr("snapshot_id")
+    del _tenant_attr
 
     # ------------------------------------------------------------------ SQL
     def query_sql(self, sql: str, scope: Optional[str] = None) -> Response:
-        t0 = time.perf_counter()
-        try:
-            sig = self.sql_canon.canonicalize(sql, scope=scope)
-        except (UnsupportedQuery, SQLSyntaxError, CanonicalizationError) as e:
-            return self._bypass(sql, "sql", str(e), t0)
-        canon_ms = (time.perf_counter() - t0) * 1e3
-        v = self.validator.validate(sig)
-        if not v:
-            return self._bypass(sql, "sql", "; ".join(v.reasons), t0, sig)
-        return self._serve(sig, "sql", canon_ms, store=True)
+        from ..service.api import QueryRequest
+
+        return _to_response(self.service.submit(QueryRequest(sql=sql, scope=scope)))
 
     # ------------------------------------------------------------------- NL
     def query_nl(self, text: str, now: Optional[_dt.date] = None,
                  scope: Optional[str] = None) -> Response:
-        if self.nl is None:
-            return Response("bypass", None, None, "nl", "no NL canonicalizer configured")
-        t0 = time.perf_counter()
-        res: NLResult = self.nl.canonicalize(text, now)
-        canon_ms = (time.perf_counter() - t0) * 1e3
-        sig = res.signature
-        if sig is not None and scope is not None:
-            sig = sig.replace(scope=scope)
-        if sig is None:
-            self.stats.nl_gated += 1
-            return self._nl_bypass(text, res, res.error or "canonicalization failed", canon_ms)
-        v = self.validator.validate(sig)
-        if not v:
-            self.stats.nl_gated += 1
-            return self._nl_bypass(text, res, "; ".join(v.reasons), canon_ms)
-        gate = gate_nl(self.policy, text, res, now)
-        if not gate:
-            self.stats.nl_gated += 1
-            return self._nl_bypass(text, res, "; ".join(gate.reasons), canon_ms)
-        store = not self.policy.sql_seeded_only
-        return self._serve(sig, "nl", canon_ms, store=store, confidence=res.confidence)
+        from ..service.api import QueryRequest
 
-    # -------------------------------------------------------------- serving
-    def _serve(self, sig: Signature, origin: str, canon_ms: float,
-               store: bool, confidence: Optional[float] = None) -> Response:
-        t0 = time.perf_counter()
-        lr: LookupResult = self.cache.lookup(sig, request_origin=origin)
-        lookup_ms = (time.perf_counter() - t0) * 1e3
-        if lr.status != "miss":
-            if (
-                origin == "nl"
-                and self.policy.verify_time_window
-                and lr.source_key is not None
-            ):
-                src = self.cache.entry(lr.source_key)
-                if src is not None and not verify_hit_time_window(sig, src.signature):
-                    lr = LookupResult("miss", None)  # fail safe: treat as miss
-            if lr.status != "miss":
-                return Response(lr.status, lr.table, sig, origin,
-                                confidence=confidence, lookup_ms=lookup_ms,
-                                canon_ms=canon_ms, source_origin=lr.source_origin)
-        t1 = time.perf_counter()
-        table = self.backend.execute(sig)
-        backend_ms = (time.perf_counter() - t1) * 1e3
-        self.stats.backend_executions += 1
-        if store:
-            self.cache.put(sig, table, origin=origin, snapshot_id=self.snapshot_id)
-        return Response("miss", table, sig, origin, confidence=confidence,
-                        lookup_ms=lookup_ms, backend_ms=backend_ms, canon_ms=canon_ms)
-
-    # -------------------------------------------------------------- bypass
-    def _bypass(self, sql: str, origin: str, reason: str, t0: float,
-                sig: Optional[Signature] = None) -> Response:
-        self.stats.bypasses += 1
-        t1 = time.perf_counter()
-        table = self.backend.execute_raw(sql)
-        backend_ms = (time.perf_counter() - t1) * 1e3
-        self.stats.backend_executions += 1
-        return Response("bypass", table, sig, origin, bypass_reason=reason,
-                        backend_ms=backend_ms,
-                        canon_ms=(t1 - t0) * 1e3)
-
-    def _nl_bypass(self, text: str, res: NLResult, reason: str, canon_ms: float) -> Response:
-        """NL requests that fail validation/safety run on the backend *only*
-        when a well-formed signature exists; they are never stored unless the
-        executed signature is well-formed and the policy allows it (§3.5)."""
-        self.stats.bypasses += 1
-        sig = res.signature
-        table = None
-        backend_ms = 0.0
-        if sig is not None and self.validator.validate(sig):
-            t1 = time.perf_counter()
-            table = self.backend.execute(sig)
-            backend_ms = (time.perf_counter() - t1) * 1e3
-            self.stats.backend_executions += 1
-        return Response("bypass", table, sig, "nl", bypass_reason=reason,
-                        confidence=res.confidence, backend_ms=backend_ms,
-                        canon_ms=canon_ms)
+        return _to_response(
+            self.service.submit(QueryRequest(nl=text, now=now, scope=scope)))

@@ -108,6 +108,11 @@ class NLResult:
 class NLCanonicalizer(Protocol):
     def canonicalize(self, text: str, now: Optional[_dt.date] = None) -> NLResult: ...
 
+    # Canonicalizers may additionally expose
+    #   canonicalize_batch(texts, now) -> list[NLResult]
+    # to resolve a whole batch of NL requests in one model call; the service
+    # pipeline uses it when present (duck-typed, optional).
+
 
 # ------------------------------------------------------------ error profiles
 
@@ -470,6 +475,32 @@ class MemoizedNL:
         res = self.inner.canonicalize(text, now)
         self._memo[key] = res
         return res
+
+    def canonicalize_batch(self, texts: list[str],
+                           now: Optional[_dt.date] = None) -> list[NLResult]:
+        """Batch front door: memoized texts are served directly; the rest go
+        to the inner canonicalizer's batch entry point in one call (falling
+        back to a loop when it has none)."""
+        nowk = now.isoformat() if now else None
+        fresh = [t for t in texts if (t, nowk) not in self._memo]
+        # preserve first-occurrence order, drop duplicates within the batch
+        fresh = list(dict.fromkeys(fresh))
+        if fresh:
+            batch_fn = getattr(self.inner, "canonicalize_batch", None)
+            if batch_fn is not None:
+                results = batch_fn(fresh, now)
+            else:
+                results = [self.inner.canonicalize(t, now) for t in fresh]
+            self.calls += len(fresh)
+            for t, r in zip(fresh, results):
+                self._memo[(t, nowk)] = r
+        fresh_set = set(fresh)
+        out = []
+        for t in texts:
+            if t not in fresh_set:
+                self.memo_hits += 1
+            out.append(self._memo[(t, nowk)])
+        return out
 
     def clear(self) -> None:
         self._memo.clear()

@@ -14,7 +14,11 @@ Three entry points:
 * ``seg_agg_fused``  — filter-fused variant: the mask is built on-device from
   encoded predicate range bounds (no HBM mask round-trip on the Pallas path);
 * ``seg_agg_batch``  — shared-scan batch: S signatures' bounds against one
-  value block, one kernel launch, returns (S, num_groups, M).
+  value block, one kernel launch, returns (S, num_groups, M);
+* ``seg_agg_batch_blocks`` — one launch for a whole shared-scan group: the
+  fused SUM block plus the optional MIN/MAX block, sharing the per-signature
+  masks and rect gathers between the two reduces (the service miss
+  planner's entry point).
 
 Every dispatcher call counts as one kernel launch in a module-level probe
 (``launch_count``/``reset_launch_count``) so tests can assert the executor's
@@ -145,13 +149,69 @@ def _p0_sum_jit(values, ids, num_groups, interpret):
     return _pallas_nan_safe_sum(values, ids, num_groups, interpret)
 
 
+# unrolled per-group GEMM below this many groups; einsum (one fused
+# batched-dot) above it, where unrolling would bloat the program
+_BATCH_GEMM_UNROLL_MAX_G = 64
+
+
+def _rect_batch_masks(pred_cols, bounds, rect_idx):
+    """(S, G, R) per-signature mask rectangles, built in one vmapped pass
+    over the batch's (S, P, K, 2) bounds."""
+    masks = jax.vmap(lambda b: bounds_mask_ref(pred_cols, b))(bounds)  # (S, N)
+    return jnp.take(masks, rect_idx, axis=1, mode="fill", fill_value=False)
+
+
+def _rect_batch_sum(mrect, values, rect_idx):
+    """Batched masked segment-sum on the rect layout.
+
+    The (G, R, M) value gather does not depend on the signature, so it is
+    done once and shared by all S masks; the reduce is then a G-batched
+    (S, R) x (R, 2M) matmul over [NaN-cleaned values | NaN indicators]
+    (GEMM instead of S separate where+sum sweeps over the rectangle), with
+    groups whose selected rows carried NaNs re-poisoned afterwards — the
+    same NaN contract as ``seg_agg_fused``.
+    """
+    values = jnp.asarray(values, jnp.float32)
+    m = values.shape[1]
+    vrect = jnp.take(values, rect_idx, axis=0, mode="fill", fill_value=0.0)  # (G,R,M)
+    nan = jnp.isnan(vrect)
+    stacked = jnp.concatenate(
+        [jnp.where(nan, 0.0, vrect), nan.astype(jnp.float32)], axis=-1)
+    mf = mrect.astype(jnp.float32)
+    g = stacked.shape[0]
+    if g <= _BATCH_GEMM_UNROLL_MAX_G:
+        both = jnp.stack([mf[:, i, :] @ stacked[i] for i in range(g)], axis=1)
+    else:
+        both = jnp.einsum("sgr,grm->sgm", mf, stacked)
+    return both[..., :m] + jnp.where(both[..., m:] > 0, jnp.nan, 0.0)
+
+
+def _rect_batch_minmax(mrect, values, rect_idx, op):
+    """Batched masked min/max on the rect layout: values are gathered once
+    in (M, G, R) layout so each signature's reduce runs over the contiguous
+    last axis (a strided (G, R, M) reduce is ~2x slower on CPU)."""
+    ident = jnp.inf if op == "min" else -jnp.inf
+    red = jnp.min if op == "min" else jnp.max
+    vrect_t = jnp.take(jnp.asarray(values, jnp.float32).T, rect_idx,
+                       axis=1, mode="fill", fill_value=ident)  # (M, G, R)
+    outs = [red(jnp.where(mrect[i][None], vrect_t, ident), axis=2)  # (M, G)
+            for i in range(mrect.shape[0])]
+    return jnp.stack(outs).transpose(0, 2, 1)  # (S, G, M)
+
+
 @functools.partial(jax.jit, static_argnames=("op",))
 def _batch_rect_jit(values, pred_cols, bounds, rect_idx, op):
-    values = jnp.asarray(values, jnp.float32)
-    return jnp.stack([
-        _rect_reduce(values, bounds_mask_ref(pred_cols, bounds[i]), rect_idx, op)
-        for i in range(bounds.shape[0])
-    ])
+    mrect = _rect_batch_masks(pred_cols, bounds, rect_idx)
+    if op == "sum":
+        return _rect_batch_sum(mrect, values, rect_idx)
+    return _rect_batch_minmax(mrect, values, rect_idx, op)
+
+
+@jax.jit
+def _batch_blocks_rect_jit(sum_block, mm_block, pred_cols, bounds, rect_idx):
+    mrect = _rect_batch_masks(pred_cols, bounds, rect_idx)
+    return (_rect_batch_sum(mrect, sum_block, rect_idx),
+            _rect_batch_minmax(mrect, mm_block, rect_idx, "min"))
 
 
 @functools.partial(jax.jit, static_argnames=("op",))
@@ -241,3 +301,34 @@ def seg_agg_batch(values, ids, pred_cols, bounds, num_groups: int,
                                jnp.asarray(bounds, jnp.float32), rect_idx, op)
     return _batch_jit(values, ids, jnp.asarray(pred_cols, jnp.float32),
                       jnp.asarray(bounds, jnp.float32), num_groups, op, impl)
+
+
+def seg_agg_batch_blocks(sum_block, mm_block, ids, pred_cols, bounds,
+                         num_groups: int, impl: str | None = None,
+                         rect_idx=None):
+    """One launch for a whole shared-scan group: the fused SUM/COUNT/AVG
+    block plus the (optional) fused MIN/MAX block, sharing the per-signature
+    masks and rect gathers between the two reduces instead of rebuilding
+    them per block.  This is the service miss planner's entry point — a
+    dashboard refresh is one call here, whatever its measure mix.
+
+    Returns ``(sums (S, G, 1+Ms), mm (S, G, Mm) | None)``; MAX columns are
+    pre-negated by the caller so the mm reduce is always a min.  On the
+    xla+rect path both blocks genuinely share one jitted computation (one
+    recorded launch); the pallas/interpret and scatter fallbacks dispatch
+    one kernel per block and record launches accordingly.
+    """
+    impl = impl or kernel_impl()
+    _record_launch()
+    pred_cols = jnp.asarray(pred_cols, jnp.float32)
+    b = jnp.asarray(bounds, jnp.float32)
+    if impl == "xla" and rect_idx is not None:
+        if mm_block is None:
+            return _batch_rect_jit(sum_block, pred_cols, b, rect_idx, "sum"), None
+        return _batch_blocks_rect_jit(sum_block, mm_block, pred_cols, b, rect_idx)
+    sums = _batch_jit(sum_block, ids, pred_cols, b, num_groups, "sum", impl)
+    mm = None
+    if mm_block is not None:
+        _record_launch()  # second kernel dispatch on the per-block fallback
+        mm = _batch_jit(mm_block, ids, pred_cols, b, num_groups, "min", impl)
+    return sums, mm

@@ -27,13 +27,15 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--capacity", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="requests per submit_batch (dashboard refresh size)")
     args = ap.parse_args()
 
     import jax
 
-    from ..core import (MemoizedNL, SafetyPolicy, SemanticCache,
-                        SemanticCacheMiddleware, SimulatedLLM)
+    from ..core import MemoizedNL, SafetyPolicy, SemanticCache, SimulatedLLM
     from ..olap.executor import OlapExecutor
+    from ..service import CacheService, QueryRequest
     from ..workloads import nyc_tlc, ssb, tpcds
 
     wl = {"ssb": ssb, "nyc_tlc": nyc_tlc, "tpcds": tpcds}[args.workload].build(
@@ -62,22 +64,27 @@ def main():
     backend = OlapExecutor(wl.dataset)
     cache = SemanticCache(wl.schema, capacity=args.capacity,
                           level_mapper=wl.dataset.level_mapper())
-    mw = SemanticCacheMiddleware(
-        wl.schema, backend, cache, nl=nl,
+    svc = CacheService()
+    tenant = svc.register_tenant(
+        args.workload, schema=wl.schema, backend=backend, cache=cache, nl=nl,
         policy=SafetyPolicy.balanced(wl.spatial_ambiguous))
 
     stream = wl.queries(order=args.order)[: args.queries]
-    for q in stream:
-        if q.kind == "sql":
-            mw.query_sql(q.text)
-        else:
-            mw.query_nl(q.text)
+    # submit in refresh-sized batches: misses within a batch share one
+    # backend scan and identical in-flight intents are deduped
+    reqs = [QueryRequest(sql=q.text, tenant=args.workload) if q.kind == "sql"
+            else QueryRequest(nl=q.text, tenant=args.workload) for q in stream]
+    for i in range(0, len(reqs), args.batch):
+        svc.submit_batch(reqs[i:i + args.batch])
     s = cache.stats
     n = len(stream)
-    print(f"[serve] {n} queries | hit rate {s.hit_rate():.3f} "
+    print(f"[serve] {n} queries (batch={args.batch}) | hit rate {s.hit_rate:.3f} "
           f"(exact {s.hits_exact}, rollup {s.hits_rollup}, "
           f"filterdown {s.hits_filterdown}) | misses {s.misses} "
-          f"| bypasses {mw.stats.bypasses} | backend execs {backend.executions} "
+          f"| bypasses {tenant.stats.bypasses} "
+          f"| batched misses {tenant.stats.batched_misses} "
+          f"| deduped {tenant.stats.deduped_misses} "
+          f"| backend execs {backend.executions} "
           f"| rows scanned {backend.rows_scanned:,}")
 
 

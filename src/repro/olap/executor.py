@@ -38,8 +38,8 @@ from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError, SQLCanonicalizer
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
 from ..core.table import ResultTable
-from ..kernels.seg_agg.ops import (seg_agg, seg_agg_batch, seg_agg_fused,
-                                   seg_agg_masked)
+from ..kernels.seg_agg.ops import (seg_agg, seg_agg_batch_blocks,
+                                   seg_agg_fused, seg_agg_masked)
 from .columnar import Dataset, date_to_days
 
 MAX_DENSE_GROUPS = 1 << 20  # dense group-space cap for the segment-reduce path
@@ -90,8 +90,11 @@ class OlapExecutor:
         self._rect_cache: dict[tuple, object] = {}
         self._mplans: dict[tuple, _MeasurePlan] = {}
         self._exact_cols: dict[str, bool] = {}
+        self._nan_cols: dict[str, bool] = {}
         self.executions = 0
         self.rows_scanned = 0
+        self.batch_calls = 0  # execute_batch invocations (service miss planner)
+        self.batch_groups = 0  # shared-scan groups actually fused across those
 
     @property
     def dev(self):
@@ -119,6 +122,9 @@ class OlapExecutor:
         the single-query path.
         """
         sigs = list(sigs)
+        if not sigs:
+            return []
+        self.batch_calls += 1
         out: list[Optional[ResultTable]] = [None] * len(sigs)
         if not self.fused:
             return [self.execute(s) for s in sigs]
@@ -142,6 +148,7 @@ class OlapExecutor:
                 continue
             if not idxs:
                 continue
+            self.batch_groups += 1
             self.executions += len(idxs)
             self.rows_scanned += self.ds.fact.num_rows  # one shared scan
             levels = [self._level_plan(lv) for lv in lvls]
@@ -152,16 +159,11 @@ class OlapExecutor:
             group_sigs = [sigs[i] for i in idxs]
             pred_block, bounds = self._batch_predicates(group_sigs)
             impl = None if self.impl == "auto" else self.impl
-            sums = np.asarray(
-                seg_agg_batch(plan.sum_block, gids_dev, pred_block, bounds,
-                              n_groups, "sum", impl=impl, rect_idx=rect),
-                np.float64)  # (S, G, 1+Ms)
-            mms = None
-            if plan.minmax_block is not None:
-                mms = np.asarray(
-                    seg_agg_batch(plan.minmax_block, gids_dev, pred_block,
-                                  bounds, n_groups, "min", impl=impl, rect_idx=rect),
-                    np.float64)
+            sums_dev, mms_dev = seg_agg_batch_blocks(
+                plan.sum_block, plan.minmax_block, gids_dev, pred_block,
+                bounds, n_groups, impl=impl, rect_idx=rect)
+            sums = np.asarray(sums_dev, np.float64)  # (S, G, 1+Ms)
+            mms = None if mms_dev is None else np.asarray(mms_dev, np.float64)
             for s_i, i in enumerate(idxs):
                 out[i] = self._finalize(
                     sigs[i], levels, plan, sums[s_i],
@@ -473,6 +475,18 @@ class OlapExecutor:
                 out.append((wr[0], [wr[1]]))
         return out
 
+    def _accept_all(self, qualified: str) -> list[tuple[float, float]]:
+        """Range disjunction matching every row of a column (batch filler
+        for signatures that don't constrain it)."""
+        hit = self._nan_cols.get(qualified)
+        if hit is None:
+            data = self.ds.column(qualified).data
+            hit = bool(data.dtype.kind == "f" and np.isnan(data).any())
+            self._nan_cols[qualified] = hit
+        if hit:
+            return [(-np.inf, np.inf), (np.nan, np.nan)]
+        return [(-np.inf, np.inf)]
+
     def _pred_block(self, cols: tuple):
         jnp = self.dev._jnp
         n = self.ds.fact.num_rows
@@ -516,10 +530,12 @@ class OlapExecutor:
                 ("preds", ("__zeros__",)),
                 lambda: np.zeros((self.ds.fact.num_rows, 1), np.float32))
             return block, bounds
-        # a column some other signature filters must accept *every* row here,
-        # NaNs included — full range plus the NaN sentinel
-        filler = [(-np.inf, np.inf), (np.nan, np.nan)]
-        packed = [_pack_bounds([d.get(c, filler) for c in cols]) for d in per_sig]
+        # a column some other signature filters must accept *every* row here:
+        # full range, plus the NaN sentinel only when the column can actually
+        # hold NaNs (int/dictionary/date columns never do — skipping the
+        # sentinel keeps the packed K small and the batched mask pass cheap)
+        packed = [_pack_bounds([d.get(c, self._accept_all(c)) for c in cols])
+                  for d in per_sig]
         k = max(b.shape[1] for b in packed)
         bounds = np.empty((len(sigs), len(cols), k, 2), np.float32)
         bounds[..., 0], bounds[..., 1] = _NEVER

@@ -1,0 +1,156 @@
+"""Typed request/response envelopes for the batch-first cache service.
+
+The service API replaces the one-schema, one-query-at-a-time middleware
+surface with a unified :class:`QueryRequest` (exactly one of ``sql`` | ``nl``
+| ``metric_id`` | pre-built ``signature``, plus tenant/scope and consistency
+options) and a structured :class:`QueryResult` carrying the served table, the
+resolved signature, the provenance chain of pipeline stages the request
+passed through, and per-stage timings.  Every request — single or batched,
+live or cache-warming — flows through the same staged pipeline
+(pipeline.py), so the envelopes below are the *only* request surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import datetime as _dt
+from typing import Any, Optional, Protocol, Sequence
+
+from ..core.middleware import Backend
+from ..core.signature import Filter, OrderKey, Signature, TimeWindow
+from ..core.table import ResultTable
+
+DEFAULT_TENANT = "default"
+
+
+class BatchBackend(Backend, Protocol):
+    """A backend that can additionally execute a group of signatures as one
+    shared scan (``OlapExecutor.execute_batch``).  The miss planner routes
+    multi-miss batches through this entry point when present."""
+
+    def execute_batch(self, sigs: Sequence[Signature]) -> list[ResultTable]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One unit of work for :meth:`CacheService.submit_batch`.
+
+    Exactly one of ``sql`` / ``nl`` / ``metric_id`` / ``signature`` must be
+    set.  ``tenant`` selects the registered tenant (schema + backend + cache
+    + policy); ``scope`` further partitions the key space *within* a tenant
+    (strict isolation: scoped signatures hash to disjoint keys).  ``now``
+    anchors relative-time NL phrases.  ``levels``/``filters``/``time_window``
+    /``order_by``/``limit`` parameterize governed ``metric_id`` requests.
+
+    Consistency options: ``read_only`` serves from cache or executes but
+    never stores (probe semantics); ``refresh`` skips the cache read and
+    re-executes, re-storing the fresh result (forced freshness).
+    """
+
+    sql: Optional[str] = None
+    nl: Optional[str] = None
+    metric_id: Optional[str] = None
+    signature: Optional[Signature] = None
+    tenant: str = DEFAULT_TENANT
+    scope: Optional[str] = None
+    now: Optional[_dt.date] = None
+    # governed metric_id expansion arguments
+    levels: tuple[str, ...] = ()
+    filters: tuple[Filter, ...] = ()
+    time_window: Optional[TimeWindow] = None
+    order_by: tuple[OrderKey, ...] = ()
+    limit: Optional[int] = None
+    # consistency options
+    read_only: bool = False
+    refresh: bool = False
+
+    def __post_init__(self):
+        forms = [f for f, v in (("sql", self.sql), ("nl", self.nl),
+                                ("metric_id", self.metric_id),
+                                ("signature", self.signature))
+                 if v is not None]
+        if len(forms) != 1:
+            raise ValueError(
+                "QueryRequest needs exactly one of sql | nl | metric_id | "
+                f"signature, got {forms or 'none'}")
+
+    @property
+    def kind(self) -> str:
+        if self.sql is not None:
+            return "sql"
+        if self.nl is not None:
+            return "nl"
+        if self.metric_id is not None:
+            return "metric"
+        return "signature"
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """Structured response for one :class:`QueryRequest`.
+
+    ``status`` matches the middleware vocabulary ('hit_exact' | 'hit_rollup'
+    | 'hit_filterdown' | 'hit_compose' | 'miss' | 'bypass').  ``provenance``
+    is the ordered chain of pipeline-stage outcomes the request passed
+    through (e.g. ``('canonicalize:sql', 'validate:ok', 'lookup:miss',
+    'execute:batched', 'store')``); ``timings_ms`` holds per-stage wall time.
+    ``batched`` marks misses served by a shared ``execute_batch`` scan;
+    ``deduped`` marks requests whose identical in-flight signature was
+    executed once for several requesters.
+    """
+
+    status: str
+    table: Optional[ResultTable]
+    signature: Optional[Signature]
+    origin: str  # 'sql' | 'nl' | 'metric' | 'signature'
+    tenant: str = DEFAULT_TENANT
+    bypass_reason: Optional[str] = None
+    confidence: Optional[float] = None
+    source_origin: Optional[str] = None  # origin of the serving cache entry
+    provenance: tuple[str, ...] = ()
+    timings_ms: dict[str, float] = dataclasses.field(default_factory=dict)
+    batched: bool = False
+    deduped: bool = False
+
+    @property
+    def hit(self) -> bool:
+        return self.status.startswith("hit")
+
+    def to_dict(self, include_table: bool = False) -> dict[str, Any]:
+        d: dict[str, Any] = {
+            "status": self.status,
+            "tenant": self.tenant,
+            "origin": self.origin,
+            "signature": None if self.signature is None else self.signature.to_json(),
+            "provenance": list(self.provenance),
+            "timings_ms": dict(self.timings_ms),
+            "batched": self.batched,
+            "deduped": self.deduped,
+        }
+        if self.bypass_reason is not None:
+            d["bypass_reason"] = self.bypass_reason
+        if self.confidence is not None:
+            d["confidence"] = self.confidence
+        if self.source_origin is not None:
+            d["source_origin"] = self.source_origin
+        if include_table and self.table is not None:
+            d["table"] = {n: self.table.columns[n].tolist() for n in self.table.names}
+        return d
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Per-tenant service counters (cache-level counters live in
+    ``SemanticCache.stats``).  A superset of the legacy ``MiddlewareStats``
+    fields so middleware shims can expose it unchanged."""
+
+    requests: int = 0
+    batches: int = 0
+    bypasses: int = 0
+    nl_gated: int = 0
+    backend_executions: int = 0
+    batched_misses: int = 0  # misses served through a shared execute_batch scan
+    deduped_misses: int = 0  # in-flight duplicates coalesced onto one execution
+    stores: int = 0
+
+    def to_dict(self) -> dict[str, int]:
+        return dataclasses.asdict(self)

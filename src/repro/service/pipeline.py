@@ -1,0 +1,341 @@
+"""The staged request pipeline (one tenant, one batch).
+
+Every request — SQL, NL, governed metric, or pre-built signature; live
+traffic or cache warm-up — passes through the same explicit stage sequence:
+
+    canonicalize -> validate -> gate (NL safety) -> lookup -> plan ->
+    execute -> store
+
+Stages operate on the whole batch at once, which is what makes the service
+batch-first rather than a loop over the single-query path:
+
+* **canonicalize** groups NL requests sharing a ``now`` anchor into one
+  ``canonicalize_batch`` call when the canonicalizer supports it (the
+  serving engine decodes the whole group in one batched prefill/decode);
+* **plan** dedups identical in-flight signatures — one backend execution
+  serves every requester of the same intent within the batch;
+* **execute** routes multi-miss groups through ``Backend.execute_batch``
+  (one shared scan, a single fused kernel launch per agg block) instead of
+  N serial ``execute`` calls.
+
+Each stage records its wall time per request; the outcome chain is kept in
+``provenance`` so every decision is auditable from the ``QueryResult``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, TYPE_CHECKING
+
+from ..core.cache import LookupResult
+from ..core.nl_canon import NLResult
+from ..core.safety import gate_nl, verify_hit_time_window
+from ..core.signature import Signature
+from ..core.sql_canon import CanonicalizationError
+from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
+from .api import QueryRequest, QueryResult
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .service import Tenant
+
+STAGES = ("canonicalize", "validate", "gate", "lookup", "plan", "execute", "store")
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Mutable per-request pipeline state threaded through the stages."""
+
+    req: QueryRequest
+    origin: str
+    sig: Optional[Signature] = None
+    nl_res: Optional[NLResult] = None
+    status: Optional[str] = None  # None while still flowing; set when decided
+    table: object = None
+    confidence: Optional[float] = None
+    bypass_reason: Optional[str] = None
+    source_origin: Optional[str] = None
+    store: bool = True
+    # what the execute stage runs for a bypassed request: the raw SQL text,
+    # the (validated) signature, or nothing
+    bypass_exec: Optional[str] = None  # 'raw' | 'sig' | None
+    batched: bool = False
+    deduped: bool = False
+    provenance: list = dataclasses.field(default_factory=list)
+    timings: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def pending(self) -> bool:
+        return self.status is None
+
+    def add_ms(self, stage: str, ms: float) -> None:
+        self.timings[stage] = self.timings.get(stage, 0.0) + ms
+
+    def bypass(self, reason: str, exec_mode: Optional[str] = None) -> None:
+        self.status = "bypass"
+        self.bypass_reason = reason
+        self.bypass_exec = exec_mode
+        self.store = False
+        self.provenance.append(f"bypass:{reason.split(';')[0][:60]}")
+
+
+def run_pipeline(tenant: "Tenant", requests: list[QueryRequest]) -> list[QueryResult]:
+    states = [RequestState(req=r, origin=r.kind) for r in requests]
+    tenant.stats.requests += len(states)
+    tenant.stats.batches += 1
+    for stage in (_stage_canonicalize, _stage_validate, _stage_gate,
+                  _stage_lookup, _stage_plan_and_execute, _stage_store):
+        stage(tenant, states)
+    return [_finalize(tenant, s) for s in states]
+
+
+# ------------------------------------------------------------- canonicalize
+
+
+def _stage_canonicalize(tenant: "Tenant", states: list[RequestState]) -> None:
+    nl_states = [s for s in states if s.origin == "nl"]
+    _canonicalize_nl(tenant, nl_states)
+    for s in states:
+        if s.origin == "nl":
+            continue
+        t0 = time.perf_counter()
+        try:
+            if s.origin == "sql":
+                s.sig = tenant.sql_canon.canonicalize(s.req.sql, scope=s.req.scope)
+            elif s.origin == "metric":
+                if tenant.metrics is None:
+                    raise CanonicalizationError("no metric layer configured")
+                s.sig = tenant.metrics.expand(
+                    s.req.metric_id, levels=s.req.levels, filters=s.req.filters,
+                    time_window=s.req.time_window, order_by=s.req.order_by,
+                    limit=s.req.limit, scope=s.req.scope)
+            else:  # pre-built signature
+                s.sig = s.req.signature
+                if s.req.scope is not None:
+                    s.sig = s.sig.replace(scope=s.req.scope)
+        except (UnsupportedQuery, SQLSyntaxError, CanonicalizationError, KeyError) as e:
+            s.add_ms("canonicalize", (time.perf_counter() - t0) * 1e3)
+            # raw-SQL bypasses still run on the backend; metric/signature
+            # failures have nothing safe to execute
+            s.bypass(str(e), "raw" if s.origin == "sql" else None)
+            continue
+        s.add_ms("canonicalize", (time.perf_counter() - t0) * 1e3)
+        s.provenance.append(f"canonicalize:{s.origin}")
+
+
+def _canonicalize_nl(tenant: "Tenant", states: list[RequestState]) -> None:
+    if not states:
+        return
+    if tenant.nl is None:
+        for s in states:
+            s.add_ms("canonicalize", 0.0)
+            s.bypass("no NL canonicalizer configured")
+        return
+    # group by the `now` anchor so each group can share one batched model call
+    groups: dict[Optional[str], list[RequestState]] = {}
+    for s in states:
+        groups.setdefault(s.req.now.isoformat() if s.req.now else None, []).append(s)
+    batch_fn = getattr(tenant.nl, "canonicalize_batch", None)
+    for group in groups.values():
+        now = group[0].req.now
+        t0 = time.perf_counter()
+        if batch_fn is not None and len(group) > 1:
+            results = batch_fn([s.req.nl for s in group], now)
+            tag = "canonicalize:nl_batched"
+        else:
+            results = [tenant.nl.canonicalize(s.req.nl, now) for s in group]
+            tag = "canonicalize:nl"
+        ms = (time.perf_counter() - t0) * 1e3 / len(group)
+        for s, res in zip(group, results):
+            s.add_ms("canonicalize", ms)
+            s.nl_res = res
+            s.confidence = res.confidence
+            sig = res.signature
+            if sig is not None and s.req.scope is not None:
+                sig = sig.replace(scope=s.req.scope)
+            if sig is None:
+                tenant.stats.nl_gated += 1
+                s.bypass(res.error or "canonicalization failed")
+                continue
+            s.sig = sig
+            s.provenance.append(tag)
+
+
+# ----------------------------------------------------------------- validate
+
+
+def _stage_validate(tenant: "Tenant", states: list[RequestState]) -> None:
+    for s in states:
+        if not s.pending:
+            continue
+        t0 = time.perf_counter()
+        v = tenant.validator.validate(s.sig)
+        s.add_ms("validate", (time.perf_counter() - t0) * 1e3)
+        if v:
+            s.provenance.append("validate:ok")
+            continue
+        reason = "; ".join(v.reasons)
+        if s.origin == "nl":
+            tenant.stats.nl_gated += 1
+            s.bypass(reason)  # invalid NL signature: nothing safe to execute
+        else:
+            # raw SQL still runs on the backend; metric/signature requests
+            # have no raw form, so an invalid signature executes nothing
+            s.bypass(reason, "raw" if s.origin == "sql" else None)
+
+
+# --------------------------------------------------------------- NL gating
+
+
+def _stage_gate(tenant: "Tenant", states: list[RequestState]) -> None:
+    for s in states:
+        if not s.pending:
+            continue
+        if s.origin == "nl":
+            t0 = time.perf_counter()
+            gate = gate_nl(tenant.policy, s.req.nl, s.nl_res, s.req.now)
+            s.add_ms("gate", (time.perf_counter() - t0) * 1e3)
+            if not gate:
+                tenant.stats.nl_gated += 1
+                # the signature is schema-valid: the bypass still executes it,
+                # it just never touches the cache (§3.5)
+                s.bypass("; ".join(gate.reasons), "sig")
+                continue
+            s.provenance.append("gate:ok")
+            s.store = not tenant.policy.sql_seeded_only
+        if s.req.read_only:
+            s.store = False
+
+
+# ------------------------------------------------------------------- lookup
+
+
+def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
+    for s in states:
+        if not s.pending:
+            continue
+        if s.req.refresh:
+            s.provenance.append("lookup:skipped_refresh")
+            continue
+        t0 = time.perf_counter()
+        lr: LookupResult = tenant.cache.lookup(
+            s.sig, request_origin="nl" if s.origin == "nl" else "sql")
+        if lr.status != "miss" and s.origin == "nl" \
+                and tenant.policy.verify_time_window and lr.source_key is not None:
+            src = tenant.cache.entry(lr.source_key)
+            if src is not None and not verify_hit_time_window(s.sig, src.signature):
+                lr = LookupResult("miss", None)  # fail safe: treat as miss
+        s.add_ms("lookup", (time.perf_counter() - t0) * 1e3)
+        s.provenance.append(f"lookup:{lr.status}")
+        if lr.status != "miss":
+            s.status = lr.status
+            s.table = lr.table
+            s.source_origin = lr.source_origin
+
+
+# ---------------------------------------------------- miss planner + execute
+
+
+def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> None:
+    """Group the batch's cache misses, dedup identical in-flight signatures,
+    and execute the unique ones through one ``execute_batch`` shared scan
+    (falling back to serial ``execute`` for singleton groups or plain
+    backends).  Bypass executions stay per-request — they are out-of-scope
+    by definition and carry no shareable signature."""
+    misses: dict[str, list[RequestState]] = {}
+    for s in states:
+        if s.pending:
+            t0 = time.perf_counter()
+            misses.setdefault(s.sig.key(), []).append(s)
+            s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
+
+    leaders = [group[0] for group in misses.values()]
+    for group in misses.values():
+        if len(group) > 1:
+            tenant.stats.deduped_misses += len(group) - 1
+            for s in group[1:]:
+                s.deduped = True
+                s.provenance.append("plan:deduped")
+
+    if len(leaders) > 1 and hasattr(tenant.backend, "execute_batch"):
+        t0 = time.perf_counter()
+        tables = tenant.backend.execute_batch([s.sig for s in leaders])
+        batch_ms = (time.perf_counter() - t0) * 1e3
+        tenant.stats.backend_executions += len(leaders)
+        tenant.stats.batched_misses += len(leaders)
+        for s, table in zip(leaders, tables):
+            s.table = table
+            s.batched = True
+            # the scan is shared: each request is attributed the full batch
+            # wall time under 'execute' (not a per-request cost)
+            s.add_ms("execute", batch_ms)
+            s.provenance.append("execute:batched")
+    else:
+        for s in leaders:
+            t0 = time.perf_counter()
+            s.table = tenant.backend.execute(s.sig)
+            s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
+            tenant.stats.backend_executions += 1
+            s.provenance.append("execute:single")
+    for group in misses.values():
+        for s in group:
+            s.status = "miss"
+            if s is not group[0]:
+                s.table = group[0].table
+                s.batched = group[0].batched
+
+    # bypass executions (raw SQL or a validated-but-gated NL signature)
+    for s in states:
+        if s.status != "bypass" or s.bypass_exec is None:
+            continue
+        t0 = time.perf_counter()
+        if s.bypass_exec == "raw":
+            s.table = tenant.backend.execute_raw(s.req.sql)
+        else:
+            s.table = tenant.backend.execute(s.sig)
+        s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
+        tenant.stats.backend_executions += 1
+        s.provenance.append(f"execute:bypass_{s.bypass_exec}")
+
+
+# -------------------------------------------------------------------- store
+
+
+def _stage_store(tenant: "Tenant", states: list[RequestState]) -> None:
+    stored: set[str] = set()
+    for s in states:
+        if s.status != "miss" or not s.store or s.table is None:
+            continue
+        key = s.sig.key()
+        if key in stored:
+            continue
+        stored.add(key)
+        t0 = time.perf_counter()
+        tenant.cache.put(s.sig, s.table,
+                         origin="nl" if s.origin == "nl" else "sql",
+                         snapshot_id=tenant.snapshot_id)
+        s.add_ms("store", (time.perf_counter() - t0) * 1e3)
+        tenant.stats.stores += 1
+        s.provenance.append("store")
+
+
+# ----------------------------------------------------------------- finalize
+
+
+def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
+    if s.status == "bypass":
+        tenant.stats.bypasses += 1
+    return QueryResult(
+        status=s.status or "bypass",
+        table=s.table,
+        signature=s.sig if s.sig is not None else (
+            s.nl_res.signature if s.nl_res is not None else None),
+        origin=s.origin,
+        tenant=s.req.tenant,
+        bypass_reason=s.bypass_reason,
+        confidence=s.confidence,
+        source_origin=s.source_origin,
+        provenance=tuple(s.provenance),
+        timings_ms=dict(s.timings),
+        batched=s.batched,
+        deduped=s.deduped,
+    )

@@ -1,0 +1,172 @@
+"""CacheService — the batch-first, multi-tenant semantic-caching service.
+
+The paper's middleware is a *shared* cache serving many clients over multiple
+star schemas.  ``CacheService`` hosts that sharing explicitly: a tenant
+registry (schema + backend + cache + safety policy + NL canonicalizer +
+governed-metric layer + stats per tenant, with strict key-space isolation),
+a batch-first request surface (``submit_batch`` routes all of a dashboard
+refresh's cache misses through one shared-scan ``execute_batch`` launch),
+and a lifecycle API (``advance_snapshot`` / ``invalidate`` / ``warm``) that
+reuses the same staged pipeline as live traffic.
+
+    svc = CacheService()
+    svc.register_tenant("analytics", schema=wl.schema,
+                        backend=OlapExecutor(wl.dataset), nl=llm)
+    results = svc.submit_batch([
+        QueryRequest(sql=tile_sql, tenant="analytics") for tile_sql in tiles
+    ])
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from ..core.cache import SemanticCache
+from ..core.metrics import MetricLayer
+from ..core.nl_canon import NLCanonicalizer
+from ..core.safety import SafetyPolicy
+from ..core.schema import StarSchema
+from ..core.sql_canon import SQLCanonicalizer
+from ..core.validator import SignatureValidator
+from .api import DEFAULT_TENANT, Backend, QueryRequest, QueryResult, TenantStats
+from .pipeline import run_pipeline
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One registered tenant: its schema universe and serving machinery."""
+
+    name: str
+    schema: StarSchema
+    backend: Backend
+    cache: SemanticCache
+    nl: Optional[NLCanonicalizer]
+    policy: SafetyPolicy
+    metrics: Optional[MetricLayer]
+    snapshot_id: str
+    sql_canon: SQLCanonicalizer
+    validator: SignatureValidator
+    stats: TenantStats
+
+
+class CacheService:
+    def __init__(self):
+        self._tenants: dict[str, Tenant] = {}
+
+    # ----------------------------------------------------------- tenants
+    def register_tenant(
+        self,
+        name: str = DEFAULT_TENANT,
+        *,
+        schema: StarSchema,
+        backend: Backend,
+        cache: Optional[SemanticCache] = None,
+        nl: Optional[NLCanonicalizer] = None,
+        policy: SafetyPolicy = SafetyPolicy(),
+        metrics: Optional[MetricLayer] = None,
+        snapshot_id: str = "snap0",
+    ) -> Tenant:
+        """Register a tenant.  Tenants are isolated structurally (each has
+        its own cache instance) and by key space (request ``scope`` is part
+        of the signature hash), so one tenant can never serve another's
+        entries."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already registered")
+        t = Tenant(
+            name=name, schema=schema, backend=backend,
+            cache=cache if cache is not None else SemanticCache(schema),
+            nl=nl, policy=policy, metrics=metrics, snapshot_id=snapshot_id,
+            sql_canon=SQLCanonicalizer(schema),
+            validator=SignatureValidator(schema),
+            stats=TenantStats(),
+        )
+        self._tenants[name] = t
+        return t
+
+    def tenant(self, name: str = DEFAULT_TENANT) -> Tenant:
+        t = self._tenants.get(name)
+        if t is None:
+            raise KeyError(f"unknown tenant {name!r}: registered = "
+                           f"{sorted(self._tenants)}")
+        return t
+
+    def tenants(self) -> list[str]:
+        return sorted(self._tenants)
+
+    # ----------------------------------------------------------- requests
+    def submit(self, request: QueryRequest) -> QueryResult:
+        """Single-request convenience wrapper: a one-element batch."""
+        return self.submit_batch([request])[0]
+
+    def submit_batch(self, requests: Sequence[QueryRequest]) -> list[QueryResult]:
+        """Run a batch through the staged pipeline, preserving order.
+
+        Requests are partitioned by tenant; each tenant partition flows
+        through canonicalize -> validate -> gate -> lookup -> plan ->
+        execute -> store as one unit, so misses sharing a dataset are
+        deduped and executed by a single shared-scan ``execute_batch``
+        launch per agg block.
+        """
+        requests = list(requests)
+        by_tenant: dict[str, list[int]] = {}
+        for i, r in enumerate(requests):
+            by_tenant.setdefault(r.tenant, []).append(i)
+        # resolve every tenant before any partition runs: an unknown tenant
+        # must reject the whole batch up front, not halfway through with
+        # other tenants' side effects already committed
+        tenants = {name: self.tenant(name) for name in by_tenant}
+        out: list[Optional[QueryResult]] = [None] * len(requests)
+        for name, idxs in by_tenant.items():
+            results = run_pipeline(tenants[name], [requests[i] for i in idxs])
+            for i, res in zip(idxs, results):
+                out[i] = res
+        return out  # type: ignore[return-value]
+
+    def warm(self, requests: Sequence[QueryRequest]) -> list[QueryResult]:
+        """Prefill the cache through the very same pipeline as live traffic
+        (canonicalization, validation, and safety gating all apply — warming
+        can never plant an entry a live request couldn't have created).
+        ``read_only`` requests are rejected since a warm-up that cannot
+        store is a no-op."""
+        for r in requests:
+            if r.read_only:
+                raise ValueError("warm() requests must allow stores "
+                                 "(read_only=True is a no-op for warming)")
+        return self.submit_batch(requests)
+
+    # ---------------------------------------------------------- lifecycle
+    def advance_snapshot(
+        self,
+        tenant: str = DEFAULT_TENANT,
+        snapshot_id: str = "",
+        updated_start: Optional[str] = None,
+        updated_end: Optional[str] = None,
+    ) -> int:
+        """New data arrived for a tenant: bump its snapshot id and drop the
+        entries the update can affect (open-ended windows always; closed
+        windows only when they intersect [updated_start, updated_end)).
+        Returns the number of invalidated entries."""
+        t = self.tenant(tenant)
+        if snapshot_id:
+            t.snapshot_id = snapshot_id
+        return t.cache.invalidate_snapshot(updated_start, updated_end)
+
+    def invalidate(self, tenant: str = DEFAULT_TENANT, *,
+                   schema_change: bool = False,
+                   updated_start: Optional[str] = None,
+                   updated_end: Optional[str] = None) -> int:
+        """Explicit invalidation: full drop on schema change, else the same
+        window-intersection rule as ``advance_snapshot``."""
+        t = self.tenant(tenant)
+        if schema_change:
+            return t.cache.invalidate_schema_change()
+        return t.cache.invalidate_snapshot(updated_start, updated_end)
+
+    # -------------------------------------------------------------- stats
+    def stats(self, tenant: Optional[str] = None) -> dict:
+        """Structured stats: per-tenant service counters + cache counters
+        (the ``to_dict`` forms the satellite task asks for)."""
+        if tenant is not None:
+            t = self.tenant(tenant)
+            return {"service": t.stats.to_dict(), "cache": t.cache.stats.to_dict()}
+        return {name: self.stats(name) for name in self.tenants()}

@@ -114,14 +114,26 @@ class CanonicalizerService:
         self.prompt_header = prompt_header
 
     def canonicalize(self, text: str, now: Optional[_dt.date] = None) -> NLResult:
-        prompt = f"{self.prompt_header}question: {text}\nsignature: "
-        out = self.engine.generate([prompt], constrained=True)[0]
-        raw = out["text"]
-        confidence = 1.0 / (1.0 + math.exp(-(out["logprob"] + 1.0)))  # squashed heuristic
-        try:
-            obj = json.loads(raw)
-            obj.setdefault("schema", self.schema_name)
-            sig = signature_from_json(obj)
-        except Exception as e:
-            return NLResult(None, round(confidence, 3), raw, f"malformed JSON: {e}")
-        return NLResult(sig, round(confidence, 3), raw, None)
+        return self.canonicalize_batch([text], now)[0]
+
+    def canonicalize_batch(self, texts: list[str],
+                           now: Optional[_dt.date] = None) -> list[NLResult]:
+        """Pipeline-stage entry point: the whole batch of NL requests is
+        decoded by one slot-batched prefill+decode pass of the engine (one
+        model launch for a dashboard refresh's NL tiles, not one per tile)."""
+        prompts = [f"{self.prompt_header}question: {t}\nsignature: " for t in texts]
+        outs = self.engine.generate(prompts, constrained=True)
+        results = []
+        for out in outs:
+            raw = out["text"]
+            confidence = 1.0 / (1.0 + math.exp(-(out["logprob"] + 1.0)))  # squashed heuristic
+            try:
+                obj = json.loads(raw)
+                obj.setdefault("schema", self.schema_name)
+                sig = signature_from_json(obj)
+            except Exception as e:
+                results.append(NLResult(None, round(confidence, 3), raw,
+                                        f"malformed JSON: {e}"))
+                continue
+            results.append(NLResult(sig, round(confidence, 3), raw, None))
+        return results

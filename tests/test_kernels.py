@@ -105,6 +105,47 @@ def test_seg_agg_fused_empty_mask():
     np.testing.assert_array_equal(out, np.full((7, 2), np.inf, np.float32))
 
 
+# ---------------------------------------------------- seg_agg batch entry
+
+
+@pytest.mark.parametrize("impl,with_rect", [("xla", True), ("xla", False),
+                                            ("interpret", False)])
+def test_seg_agg_batch_blocks_matches_per_op(impl, with_rect):
+    """The combined one-launch entry (shared masks/gathers for the SUM and
+    MIN/MAX blocks) must agree with the per-op ``seg_agg_batch`` dispatch —
+    keeps the two public batch paths from drifting apart."""
+    from repro.kernels.seg_agg.ops import seg_agg_batch, seg_agg_batch_blocks
+
+    n, g, s = 1000, 8, 5
+    sum_vals = rng.normal(size=(n, 3)).astype(np.float32)
+    mm_vals = rng.normal(size=(n, 2)).astype(np.float32)
+    mm_vals[rng.integers(0, n, size=4), 0] = np.nan  # NaN-confinement contract
+    ids = rng.integers(0, g, size=n).astype(np.int32)
+    pred = rng.integers(0, 10, size=(n, 2)).astype(np.float32)
+    bounds = np.stack([_rand_bounds(2, 2) for _ in range(s)])
+    rect = None
+    if with_rect:
+        counts = np.bincount(ids, minlength=g)
+        r = int(counts.max())
+        order = np.argsort(ids, kind="stable")
+        starts = np.concatenate([[0], np.cumsum(counts[:-1])])
+        pos = np.arange(n) - starts[ids[order]]
+        rect = np.full((g, r), n, np.int32)
+        rect[ids[order], pos] = order
+    sums, mm = seg_agg_batch_blocks(sum_vals, mm_vals, ids, pred, bounds, g,
+                                    impl=impl, rect_idx=rect)
+    ref_sums = np.asarray(seg_agg_batch(sum_vals, ids, pred, bounds, g,
+                                        "sum", impl=impl))
+    ref_mm = np.asarray(seg_agg_batch(mm_vals, ids, pred, bounds, g,
+                                      "min", impl=impl))
+    np.testing.assert_allclose(np.asarray(sums), ref_sums, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mm), ref_mm, rtol=1e-5, atol=1e-5)
+    sums_only, none_mm = seg_agg_batch_blocks(sum_vals, None, ids, pred,
+                                              bounds, g, impl=impl, rect_idx=rect)
+    assert none_mm is None
+    np.testing.assert_allclose(np.asarray(sums_only), ref_sums, rtol=1e-4, atol=1e-4)
+
+
 # --------------------------------------------------------------- flash attn
 
 

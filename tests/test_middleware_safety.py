@@ -117,6 +117,22 @@ class TestNLSafety:
         assert r.status == "miss"
         assert len(mw.cache) == 0  # read-only for NL
 
+    def test_no_nl_canonicalizer_counts_bypass(self, ssb_small):
+        """An NL request on an NL-less deployment is a *counted* bypass:
+        stats.bypasses advances and the canonicalize stage is timed, so
+        stats never drift from the actual request mix."""
+        from repro.core import SemanticCache, SemanticCacheMiddleware
+
+        backend = OlapExecutor(ssb_small.dataset, impl="numpy")
+        cache = SemanticCache(ssb_small.schema)
+        mw = SemanticCacheMiddleware(ssb_small.schema, backend, cache)  # nl=None
+        r = mw.query_nl("total revenue by region")
+        assert r.status == "bypass"
+        assert "no NL canonicalizer" in r.bypass_reason
+        assert mw.stats.bypasses == 1
+        assert r.canon_ms >= 0.0
+        assert backend.executions == 0  # nothing safe to execute
+
     def test_cross_surface_hit(self, tlc_small):
         mw, _ = mk(tlc_small)
         sql = ("SELECT pu_borough, SUM(total_amount) AS earnings FROM trips "
