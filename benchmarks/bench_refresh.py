@@ -1,0 +1,200 @@
+"""Incremental snapshot refresh benchmark: delta merge vs drop-and-recompute.
+
+A dashboard of composable intents (SUM/COUNT/MIN/MAX over shared grouping,
+differing filters; one closed window inside the delta's date range, one
+safely outside) is warmed against a cold cache, then the fact table receives
+append-only deltas ("ticks").  Two identically seeded service instances
+handle each tick:
+
+* ``incremental`` — ``advance_snapshot(delta=...)``: append, scan *only the
+  delta partition* as one fused batch, and merge the delta aggregates into
+  the cached tables (``core.refresh``);
+* ``recompute``   — ``advance_snapshot(delta=..., refresh=False)`` followed
+  by re-warming the dashboard: append, drop affected entries, and pay full
+  scans to rebuild them (the pre-incremental behavior).
+
+Reports per-tick wall time (first tick separated: it carries the delta-shape
+jit compile), fact rows scanned per tick, and the refresh-vs-recompute
+speedup; cross-checks the incrementally maintained tables against an
+independent numpy-oracle full recompute over the grown dataset, and writes
+``BENCH_refresh.json``.  Target (ISSUE 3): >=5x at 1M base rows / 10k delta.
+
+    PYTHONPATH=src python benchmarks/bench_refresh.py            # 1M rows
+    PYTHONPATH=src python benchmarks/bench_refresh.py --quick    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+_JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+          "JOIN supplier ON lineorder.lo_suppkey = supplier.s_key "
+          "JOIN part ON lineorder.lo_partkey = part.p_key "
+          "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+_BASE = ("SELECT {lvl}, SUM(lo_revenue) AS rev, COUNT(*) AS n, "
+         "MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi "
+         f"FROM lineorder {_JOINS}")
+
+# Composable dashboard: windowless tiles are affected by every tick; the
+# d_year tiles show the window-intersection rule (1998 refreshes, 1992 stays
+# untouched because the deltas only carry 1998 dates).
+DASHBOARD = (
+    [_BASE.format(lvl="c_region") + w + "GROUP BY c_region"
+     for w in ("", "WHERE lo_quantity < 25 ", "WHERE lo_discount <= 3 ",
+               "WHERE c_region = 'ASIA' ", "WHERE p_mfgr = 'MFGR#1' ",
+               "WHERE d_year = 1998 ", "WHERE d_year = 1992 ")]
+    + [_BASE.format(lvl=lvl) + f"GROUP BY {lvl}"
+       for lvl in ("c_nation", "s_region", "d_year")]
+)
+
+
+def make_delta(ds, n: int, rng, year: int = 1998) -> dict:
+    """Append-batch of fact rows shaped like ssb.build_dataset's generator,
+    with order dates confined to ``year`` (so the derived update extent
+    exercises the window-intersection rule)."""
+    dim = ds.dims["dates"]
+    day_keys = np.nonzero(dim.columns["d_year"].data == year)[0]
+    od = rng.choice(day_keys, size=n)
+    qty = rng.integers(1, 51, size=n)
+    price = np.round(rng.uniform(100, 10_000, size=n), 2)
+    disc = rng.integers(0, 11, size=n)
+    return {
+        "lo_orderdate": od,
+        "lo_custkey": rng.integers(0, ds.dims["customer"].num_rows, size=n),
+        "lo_suppkey": rng.integers(0, ds.dims["supplier"].num_rows, size=n),
+        "lo_partkey": rng.integers(0, ds.dims["part"].num_rows, size=n),
+        "lo_quantity": qty,
+        "lo_extendedprice": price,
+        "lo_discount": disc,
+        "lo_revenue": np.round(price * (1 - disc / 100.0), 2),
+        "lo_supplycost": np.round(price * rng.uniform(0.4, 0.8, size=n), 2),
+        "lo_date": dim.columns["d_date"].data[od],
+    }
+
+
+def _setup(args, impl, name):
+    from repro.core import SemanticCache
+    from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService
+    from repro.workloads import ssb
+
+    wl = ssb.build(n_fact=args.rows, seed=0)
+    backend = OlapExecutor(wl.dataset, impl=impl, fused=True)
+    svc = CacheService()
+    svc.register_tenant(name, schema=wl.schema, backend=backend,
+                        cache=SemanticCache(wl.schema,
+                                            level_mapper=wl.dataset.level_mapper()))
+    return wl, backend, svc
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=1_000_000, help="SSB fact rows")
+    ap.add_argument("--delta", type=int, default=10_000, help="rows appended per tick")
+    ap.add_argument("--ticks", type=int, default=4, help="append ticks to time")
+    ap.add_argument("--impl", default=None, help="seg_agg impl (default: kernel dispatch)")
+    ap.add_argument("--out", default="BENCH_refresh.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 60k rows, 2k deltas, 3 ticks")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows, args.delta, args.ticks = 60_000, 2_000, 3
+    if args.ticks < 2:
+        raise SystemExit("--ticks must be >= 2 (tick 1 carries jit compiles)")
+
+    from repro.kernels.seg_agg.ops import kernel_impl
+    from repro.olap.executor import OlapExecutor
+    from repro.service import QueryRequest
+
+    impl = args.impl or kernel_impl()
+    print(f"building 2x SSB ({args.rows:,} fact rows, impl={impl}) ...", flush=True)
+    t0 = time.perf_counter()
+    wl_inc, be_inc, svc_inc = _setup(args, impl, "inc")
+    wl_rec, be_rec, svc_rec = _setup(args, impl, "rec")
+    print(f"  built in {time.perf_counter() - t0:.1f}s")
+
+    reqs_inc = [QueryRequest(sql=q, tenant="inc") for q in DASHBOARD]
+    reqs_rec = [QueryRequest(sql=q, tenant="rec") for q in DASHBOARD]
+    print(f"warming {len(DASHBOARD)}-tile dashboard on both services ...", flush=True)
+    svc_inc.submit_batch(reqs_inc)
+    svc_rec.submit_batch(reqs_rec)
+
+    rng = np.random.default_rng(7)
+    inc_ms, rec_ms, inc_rows, rec_rows, reports = [], [], [], [], []
+    print(f"running {args.ticks} append ticks of {args.delta:,} rows ...", flush=True)
+    for tick in range(args.ticks):
+        delta = make_delta(wl_inc.dataset, args.delta, rng)
+
+        r0 = be_inc.rows_scanned
+        t0 = time.perf_counter()
+        rep = svc_inc.advance_snapshot("inc", f"snap{tick + 1}", delta=delta)
+        inc_ms.append((time.perf_counter() - t0) * 1e3)
+        inc_rows.append(be_inc.rows_scanned - r0)
+        reports.append(rep.to_dict())
+
+        r0 = be_rec.rows_scanned
+        t0 = time.perf_counter()
+        svc_rec.advance_snapshot("rec", f"snap{tick + 1}", delta=delta,
+                                 refresh=False)
+        svc_rec.submit_batch(reqs_rec)  # dropped tiles rebuild via full scans
+        rec_ms.append((time.perf_counter() - t0) * 1e3)
+        rec_rows.append(be_rec.rows_scanned - r0)
+        print(f"  tick {tick + 1}: incremental {inc_ms[-1]:.1f}ms "
+              f"({inc_rows[-1]:,} rows scanned) vs recompute {rec_ms[-1]:.1f}ms "
+              f"({rec_rows[-1]:,} rows)", flush=True)
+
+    # oracle: incrementally maintained tables == full recompute on grown data
+    print("oracle cross-check (merged tables vs numpy full rescan) ...", flush=True)
+    oracle = OlapExecutor(wl_inc.dataset, impl="numpy")
+    served = svc_inc.submit_batch(
+        [QueryRequest(sql=q, tenant="inc", read_only=True) for q in DASHBOARD])
+    for r in served:
+        if not r.hit:
+            raise SystemExit(f"tile not served from cache after refresh: {r.status}")
+        if not r.table.equals(oracle.execute(r.signature)):
+            raise SystemExit(
+                f"MISMATCH vs oracle for {r.signature.key()[:12]} "
+                f"(served@{r.source_snapshot})")
+    print(f"  ok ({len(served)} tiles, all cache hits after {args.ticks} ticks)")
+
+    warm_inc = float(np.mean(inc_ms[1:]))
+    warm_rec = float(np.mean(rec_ms[1:]))
+    report = {
+        "rows": args.rows,
+        "delta_rows": args.delta,
+        "ticks": args.ticks,
+        "tiles": len(DASHBOARD),
+        "impl": impl,
+        "incremental": {"tick_ms": inc_ms, "warm_mean_ms": warm_inc,
+                        "first_tick_ms": inc_ms[0],
+                        "rows_scanned_per_tick": inc_rows},
+        "recompute": {"tick_ms": rec_ms, "warm_mean_ms": warm_rec,
+                      "first_tick_ms": rec_ms[0],
+                      "rows_scanned_per_tick": rec_rows},
+        "speedup_warm": warm_rec / warm_inc if warm_inc else 0.0,
+        "scan_ratio": (float(np.mean(rec_rows)) / float(np.mean(inc_rows))
+                       if np.mean(inc_rows) else 0.0),
+        "target_speedup": 5.0,
+        "last_refresh_report": reports[-1],
+    }
+    report["target_met"] = report["speedup_warm"] >= report["target_speedup"]
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps({k: report[k] for k in
+                      ("incremental", "recompute", "speedup_warm", "scan_ratio")},
+                     indent=2))
+    print(f"wrote {args.out}: refresh {warm_inc:.1f}ms vs recompute "
+          f"{warm_rec:.1f}ms per tick ({report['speedup_warm']:.1f}x, "
+          f"target >=5x {'MET' if report['target_met'] else 'not met'}; "
+          f"scans {np.mean(inc_rows):,.0f} vs {np.mean(rec_rows):,.0f} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,8 +52,9 @@ print(f"  backend executes: {backend.executions} "
       f"{len(stream) * wl.dataset.fact.num_rows:,} without the cache)")
 
 # data refresh: new partition arrives -> open/intersecting windows invalidated
-dropped = svc.advance_snapshot("tlc", "snap1", "2024-12-01", "2025-01-01")
-print(f"  invalidated on refresh of [2024-12-01, 2025-01-01): {dropped} entries")
+# (examples/streaming_append.py shows the delta path that refreshes in place)
+rep = svc.advance_snapshot("tlc", "snap1", "2024-12-01", "2025-01-01")
+print(f"  invalidated on refresh of [2024-12-01, 2025-01-01): {rep.dropped} entries")
 
 # warm the next day's dashboard through the same pipeline the live path uses
 warmed = svc.warm(reqs[:REFRESH])

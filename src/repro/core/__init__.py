@@ -5,6 +5,7 @@ the layered NL safety policy."""
 from .cache import CacheStats, LookupResult, SemanticCache
 from .middleware import Backend, Response, SemanticCacheMiddleware
 from .nl_canon import MemoizedNL, NLResult, NLVocab, MeasureSense, SimulatedLLM
+from .refresh import merge_tables, refreshable
 from .safety import SafetyPolicy, gate_nl
 from .schema import Column, Dimension, FactTable, Hierarchy, StarSchema
 from .signature import (
@@ -28,5 +29,6 @@ __all__ = [
     "Response", "ResultTable", "SQLCanonicalizer", "SQLSyntaxError",
     "SafetyPolicy", "SemanticCache", "SemanticCacheMiddleware", "Signature",
     "SignatureValidator", "SimulatedLLM", "StarSchema", "TimeWindow",
-    "UnsupportedQuery", "gate_nl", "signature_from_json",
+    "UnsupportedQuery", "gate_nl", "merge_tables", "refreshable",
+    "signature_from_json",
 ]

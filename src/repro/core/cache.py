@@ -29,6 +29,8 @@ class CacheEntry:
     snapshot_id: str
     stored_at: float
     hits: int = 0
+    refreshes: int = 0  # in-place table replacements on snapshot advance
+    refreshed_at: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -41,6 +43,8 @@ class CacheStats:
     stores: int = 0
     evictions: int = 0
     invalidations: int = 0
+    refreshes: int = 0  # entries merged in place from a delta scan
+    refresh_fallbacks: int = 0  # affected entries replaced by a full recompute
     cross_surface_hits: int = 0  # NL request served by SQL-seeded entry or v.v.
     nl_hits: int = 0
 
@@ -71,10 +75,23 @@ class CacheStats:
 
 @dataclasses.dataclass
 class LookupResult:
-    status: str  # 'hit_exact' | 'hit_rollup' | 'hit_filterdown' | 'miss'
+    """Outcome of one cache probe.
+
+    ``status`` is one of ``'hit_exact'`` (signature-key match),
+    ``'hit_rollup'`` (re-aggregated from a finer-grained entry),
+    ``'hit_filterdown'`` (post-filtered from a superset entry),
+    ``'hit_compose'`` (flag-gated beyond-paper derivation: filter-down
+    composed with roll-up in one step, e.g. a cached (region, category)
+    result answering "by region WHERE category = x"), or ``'miss'``.
+    ``source_key``/``source_origin``/``source_snapshot`` identify the
+    serving entry and the data snapshot its table reflects.
+    """
+
+    status: str
     table: Optional[ResultTable]
     source_key: Optional[str] = None
     source_origin: Optional[str] = None
+    source_snapshot: Optional[str] = None
 
 
 class SemanticCache:
@@ -111,7 +128,8 @@ class SemanticCache:
         if entry is not None:
             self._touch(key, entry, request_origin)
             self.stats.hits_exact += 1
-            return LookupResult("hit_exact", entry.table, key, entry.origin)
+            return LookupResult("hit_exact", entry.table, key, entry.origin,
+                                entry.snapshot_id)
 
         # derivation pass over candidates sharing the measure multiset,
         # most-recently-used first
@@ -129,14 +147,16 @@ class SemanticCache:
                     if derived is not None:
                         self._touch(cand_key, cand, request_origin)
                         self.stats.hits_rollup += 1
-                        return LookupResult("hit_rollup", derived, cand_key, cand.origin)
+                        return LookupResult("hit_rollup", derived, cand_key,
+                                            cand.origin, cand.snapshot_id)
             if self.enable_filterdown:
                 plan = dv.plan_filterdown(sig, cand.signature, self.schema, cand_key)
                 if plan is not None:
                     derived = dv.apply_filterdown(plan, sig, cand.signature, cand.table)
                     self._touch(cand_key, cand, request_origin)
                     self.stats.hits_filterdown += 1
-                    return LookupResult("hit_filterdown", derived, cand_key, cand.origin)
+                    return LookupResult("hit_filterdown", derived, cand_key,
+                                        cand.origin, cand.snapshot_id)
             if self.enable_compose:
                 plan = dv.plan_compose(sig, cand.signature, self.schema, cand_key)
                 if plan is not None:
@@ -145,7 +165,8 @@ class SemanticCache:
                     if derived is not None:
                         self._touch(cand_key, cand, request_origin)
                         self.stats.hits_compose += 1
-                        return LookupResult("hit_compose", derived, cand_key, cand.origin)
+                        return LookupResult("hit_compose", derived, cand_key,
+                                            cand.origin, cand.snapshot_id)
         self.stats.misses += 1
         return LookupResult("miss", None)
 
@@ -158,9 +179,15 @@ class SemanticCache:
     ) -> str:
         key = sig.key()
         if key in self._entries:
+            # full overwrite: provenance (origin, stored_at) must track the
+            # new producer, or a SQL-refreshed entry keeps reporting the
+            # stale origin in provenance chains and stats forever
+            e = self._entries[key]
             self._entries.move_to_end(key)
-            self._entries[key].table = table
-            self._entries[key].snapshot_id = snapshot_id
+            e.table = table
+            e.snapshot_id = snapshot_id
+            e.origin = origin
+            e.stored_at = time.monotonic()
             return key
         self._entries[key] = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
         idx_key = (sig.scope, sig.schema, sig.measure_key())
@@ -171,28 +198,66 @@ class SemanticCache:
             self._evict_lru()
         return key
 
-    # ---------------------------------------------------------- invalidation
-    def invalidate_snapshot(
+    # ----------------------------------------------- invalidation / refresh
+    def affected_keys(
         self, updated_start: Optional[str] = None, updated_end: Optional[str] = None
-    ) -> int:
-        """New data arrived covering [updated_start, updated_end).  Entries
-        with open-ended windows, no window at all (they span everything), or a
-        window intersecting the updated partition are dropped; closed windows
-        outside the range remain valid (§6.2)."""
-        dropped = []
+    ) -> list[str]:
+        """Keys of the entries a data update covering [updated_start,
+        updated_end) can affect (§6.2): open-ended windows and windowless
+        entries always (they span everything), closed windows only when they
+        intersect the updated range, every entry when the update extent is
+        unknown.  The caller decides what to do with them — drop
+        (``invalidate_snapshot``) or refresh in place (``refresh_entry``)."""
+        out = []
         for key, e in self._entries.items():
             tw = e.signature.time_window
             if tw is None or tw.open_ended:
-                dropped.append(key)
-            elif updated_start is not None and updated_end is not None:
-                if tw.intersects(updated_start, updated_end):
-                    dropped.append(key)
-            else:  # unknown update extent: conservative — drop everything
-                dropped.append(key)
+                out.append(key)
+            elif updated_start is None or updated_end is None:
+                out.append(key)  # unknown update extent: conservative
+            elif tw.intersects(updated_start, updated_end):
+                out.append(key)
+        return out
+
+    def invalidate_snapshot(
+        self, updated_start: Optional[str] = None, updated_end: Optional[str] = None
+    ) -> int:
+        """New data arrived covering [updated_start, updated_end).  Affected
+        entries (see ``affected_keys``) are dropped; closed windows outside
+        the range remain valid (§6.2)."""
+        dropped = self.affected_keys(updated_start, updated_end)
         for key in dropped:
             self._remove(key)
             self.stats.invalidations += 1
         return len(dropped)
+
+    def refresh_entry(
+        self, key: str, table: ResultTable, snapshot_id: str, merged: bool = True
+    ) -> None:
+        """Bring an entry current in place after a data update, instead of
+        dropping it: the working set (LRU position, hit counters, derivation
+        index membership) survives the snapshot advance.  ``merged`` tells
+        the stats whether the table came from a delta merge (the cheap path)
+        or a full recompute fallback."""
+        e = self._entries.get(key)
+        if e is None:
+            raise KeyError(f"cannot refresh unknown entry {key!r}")
+        e.table = table
+        e.snapshot_id = snapshot_id
+        e.refreshes += 1
+        e.refreshed_at = time.monotonic()
+        if merged:
+            self.stats.refreshes += 1
+        else:
+            self.stats.refresh_fallbacks += 1
+
+    def drop(self, key: str) -> bool:
+        """Explicitly invalidate one entry by key; True when it existed."""
+        if key not in self._entries:
+            return False
+        self._remove(key)
+        self.stats.invalidations += 1
+        return True
 
     def invalidate_schema_change(self) -> int:
         n = len(self._entries)
@@ -251,7 +316,16 @@ class SemanticCache:
 def save_cache(cache: SemanticCache, path: str) -> int:
     """Spill the cache to disk (the paper's Parquet/SQLite store analogue):
     one .npz per entry + a JSON manifest of signatures/origins/snapshots.
-    Returns the number of entries written."""
+    Returns the number of entries written.
+
+    Entry files are named by signature-key hash and written via temp file +
+    rename, as is the manifest, so a crash mid-spill can never corrupt the
+    previous generation: the surviving old manifest keeps pointing at files
+    whose names (and therefore signatures) it owns.  Re-spilling to a
+    directory that previously held *more* entries removes the now-stale
+    ``entry_*.npz`` files — only after the new manifest is durable — so a
+    later ``load_cache`` against a hand-edited or partially written manifest
+    cannot resurrect them."""
     import json as _json
     import os
 
@@ -259,18 +333,32 @@ def save_cache(cache: SemanticCache, path: str) -> int:
 
     os.makedirs(path, exist_ok=True)
     manifest = []
-    for i, (key, e) in enumerate(cache._entries.items()):
-        fname = f"entry_{i:06d}.npz"
-        np.savez(os.path.join(path, fname),
-                 **{n: v for n, v in e.table.columns.items()})
+    for key, e in cache._entries.items():
+        fname = f"entry_{key[:24]}.npz"
+        tmp = os.path.join(path, fname + ".tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **{n: v for n, v in e.table.columns.items()})
+        os.replace(tmp, os.path.join(path, fname))
         manifest.append({
             "key": key, "file": fname, "origin": e.origin,
             "snapshot_id": e.snapshot_id, "hits": e.hits,
             "signature": e.signature.to_json(),
             "columns": e.table.names,
         })
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
         _json.dump(manifest, f, default=str)
+    os.replace(tmp, os.path.join(path, "manifest.json"))
+    # remove stale files only once the new manifest is durable: deleting
+    # first would leave a crash window where the surviving *old* manifest
+    # points at files that no longer exist
+    live = {m["file"] for m in manifest}
+    for fname in os.listdir(path):
+        stale = fname.startswith("entry_") and (
+            (fname.endswith(".npz") and fname not in live)
+            or fname.endswith(".npz.tmp"))  # orphans of an interrupted spill
+        if stale:
+            os.remove(os.path.join(path, fname))
     return len(manifest)
 
 

@@ -190,21 +190,38 @@ def _group_inverse(cols: list[np.ndarray], n: int) -> tuple[np.ndarray, list[np.
     return inverse, uniques
 
 
+def _extreme_at(agg: str, src: np.ndarray, inverse: np.ndarray,
+                out: np.ndarray) -> np.ndarray:
+    """NaN-aware grouped MIN/MAX scatter shared by roll-up, the refresh
+    merge algebra, and the executor's numpy oracle: NaN sources are masked
+    out of the ``.at`` call (which would otherwise raise ``RuntimeWarning:
+    invalid value encountered``) and their destination groups re-poisoned
+    afterwards — a NaN child value still yields a NaN parent, exactly what a
+    direct recompute over the NaN-bearing rows produces, without the
+    float-compare warnings."""
+    red = np.minimum if agg == "MIN" else np.maximum
+    ok = ~np.isnan(src)
+    red.at(out, inverse[ok], src[ok])
+    if not ok.all():
+        out[np.unique(inverse[~ok])] = np.nan
+    return out
+
+
 def _reaggregate(agg: str, src: np.ndarray, inverse: np.ndarray, n_groups: int) -> np.ndarray:
     """COUNT rolls up as SUM of counts; SUM/MIN/MAX as themselves (§3.6)."""
     if agg in ("SUM", "COUNT"):
         out = np.zeros(n_groups, dtype=np.float64 if src.dtype.kind == "f" else np.int64)
         np.add.at(out, inverse, src)
         return out
-    if agg == "MIN":
-        out = np.full(n_groups, np.inf if src.dtype.kind == "f" else np.iinfo(np.int64).max,
-                      dtype=src.dtype if src.dtype.kind == "f" else np.int64)
-        np.minimum.at(out, inverse, src)
-        return out
-    if agg == "MAX":
-        out = np.full(n_groups, -np.inf if src.dtype.kind == "f" else np.iinfo(np.int64).min,
-                      dtype=src.dtype if src.dtype.kind == "f" else np.int64)
-        np.maximum.at(out, inverse, src)
+    if agg in ("MIN", "MAX"):
+        if src.dtype.kind == "f":
+            ident = np.inf if agg == "MIN" else -np.inf
+            return _extreme_at(agg, src, inverse,
+                               np.full(n_groups, ident, dtype=src.dtype))
+        red = np.minimum if agg == "MIN" else np.maximum
+        ident = np.iinfo(np.int64).max if agg == "MIN" else np.iinfo(np.int64).min
+        out = np.full(n_groups, ident, dtype=np.int64)
+        red.at(out, inverse, src)
         return out
     raise AssertionError(f"non-composable agg {agg} escaped precondition check")
 

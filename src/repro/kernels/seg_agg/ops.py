@@ -260,9 +260,9 @@ def seg_agg_masked(values, ids, mask, num_groups: int, op: str = "sum",
 def _batch_jit(values, ids, pred_cols, bounds, num_groups, op, impl):
     s = bounds.shape[0]
     n, m = values.shape
-    masks = jnp.stack(
-        [bounds_mask_ref(pred_cols, bounds[i]) for i in range(s)], axis=1
-    )  # (N, S)
+    # one vmapped bounds pass (as in _rect_batch_masks) instead of unrolling
+    # S copies of the mask computation into the program
+    masks = jax.vmap(lambda b: bounds_mask_ref(pred_cols, b))(bounds).T  # (N, S)
     if op == "sum":
         v = jnp.where(masks[:, :, None], values[:, None, :], 0.0)
     else:

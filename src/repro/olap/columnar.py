@@ -57,6 +57,44 @@ class ColumnData:
             return date_to_days(v)
         return v
 
+    def _appended(self, values: np.ndarray) -> tuple[np.ndarray, Optional[np.ndarray]]:
+        """Pure form of :meth:`append`: the (data, vocab) this column would
+        hold after appending ``values`` — nothing is assigned, so callers can
+        stage every column's conversion (which may raise on bad input)
+        before committing any of them."""
+        values = np.asarray(values)
+        if self.dtype == "str":
+            new = np.asarray(values, dtype=str)
+            if len(self.vocab):
+                codes = np.searchsorted(self.vocab, new)
+                codes = np.clip(codes, 0, len(self.vocab) - 1)
+                if bool(np.all(self.vocab[codes] == new)):
+                    return (np.concatenate([self.data, codes.astype(np.int32)]),
+                            self.vocab)
+            # unseen values: re-encode everything, because ``encode_value``
+            # binary-searches a *sorted* vocab
+            decoded = self.vocab[self.data] if len(self.vocab) else self.data.astype(str)
+            vocab, codes = np.unique(np.concatenate([decoded, new]), return_inverse=True)
+            return codes.astype(np.int32), vocab
+        if self.dtype == "date" and values.dtype.kind in ("U", "O"):
+            values = np.asarray([date_to_days(d) for d in values], dtype=np.int32)
+        cast = values.astype(self.data.dtype, copy=False)
+        if self.data.dtype.kind in "iu" and values.dtype.kind in "fiu" \
+                and not np.array_equal(cast.astype(values.dtype), values):
+            # fractional/NaN/overflowing values for an int column: reject
+            # like every other malformed delta instead of silently
+            # truncating or wrapping
+            raise ValueError(
+                f"lossy cast: {values.dtype} values do not fit the column's "
+                f"{self.data.dtype} domain exactly")
+        return np.concatenate([self.data, cast]), self.vocab
+
+    def append(self, values: np.ndarray) -> None:
+        """Append raw (decoded-domain) values in place — the streaming-ingest
+        path.  Dates accept ISO strings or int days; strings re-encode the
+        whole column when the delta carries unseen values."""
+        self.data, self.vocab = self._appended(values)
+
     def decode(self, physical: np.ndarray) -> np.ndarray:
         if self.dtype == "str":
             return self.vocab[physical]
@@ -75,12 +113,36 @@ class TableData:
         return next(iter(self.columns.values())).n if self.columns else 0
 
 
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Row-range metadata for one ingest batch of the fact table.
+
+    ``[start_row, end_row)`` are fact row positions; ``[date_start,
+    date_end)`` is the batch's time extent on the schema's date column (ISO,
+    end exclusive; None when the schema has no date column).  The cache's
+    §6.2 refresh rule keys off the date extent; the executor's delta scan
+    keys off the row range.
+    """
+
+    start_row: int
+    end_row: int
+    date_start: Optional[str] = None
+    date_end: Optional[str] = None
+    snapshot_id: str = ""
+
+    @property
+    def num_rows(self) -> int:
+        return self.end_row - self.start_row
+
+
 @dataclasses.dataclass
 class Dataset:
     schema: StarSchema
     fact: TableData
     dims: dict[str, TableData]
     snapshot_id: str = "snap0"
+    version: int = 0  # bumped on every append; executors resync caches on it
+    partitions: list[Partition] = dataclasses.field(default_factory=list)
     _device: Optional["DeviceDataset"] = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -90,6 +152,93 @@ class Dataset:
         if self._device is None:
             self._device = DeviceDataset(self)
         return self._device
+
+    # ---------------------------------------------------------------- append
+    def append_rows(
+        self, rows: dict[str, np.ndarray], snapshot_id: Optional[str] = None
+    ) -> Partition:
+        """Append a batch of fact rows (streaming/delta ingest).
+
+        ``rows`` maps every fact column name to an equal-length array of raw
+        (decoded-domain) values; dimension tables are immutable — FK values
+        must reference existing dimension rows.  Records a :class:`Partition`
+        with the batch's row range and date extent, bumps ``version`` (so
+        executors resynchronize their row-aligned caches), and drops the
+        mirror's fact-aligned device arrays (rebuilt lazily; dimension
+        uploads survive).  The input arrays are never mutated.
+        """
+        missing = set(self.fact.columns) - set(rows)
+        extra = set(rows) - set(self.fact.columns)
+        if missing or extra:
+            raise ValueError(
+                f"delta columns must match the fact table exactly: "
+                f"missing {sorted(missing)}, unexpected {sorted(extra)}")
+        lengths = {len(np.asarray(v)) for v in rows.values()}
+        if len(lengths) != 1:
+            raise ValueError(f"ragged delta: column lengths {sorted(lengths)}")
+        if lengths == {0}:
+            raise ValueError("empty delta: nothing to append")
+        start = self.fact.num_rows
+        # stage every column's conversion before committing any of it: a bad
+        # value (e.g. an unparseable date) must raise with the dataset fully
+        # intact, never leave it ragged mid-append
+        staged = {name: col._appended(np.asarray(rows[name]))
+                  for name, col in self.fact.columns.items()}
+        # FK bounds are part of the contract (dimension pk == row position):
+        # an out-of-range key would commit fine and then crash every later
+        # scan's gather, far from the producer bug — reject it here instead
+        for dim in self.schema.dimensions:
+            td = self.dims.get(dim.name)
+            if td is None or dim.fact_fk not in rows:
+                continue
+            fk = np.asarray(rows[dim.fact_fk])
+            if len(fk) and (int(fk.min()) < 0 or int(fk.max()) >= td.num_rows):
+                raise ValueError(
+                    f"delta {dim.fact_fk} values [{int(fk.min())}, "
+                    f"{int(fk.max())}] fall outside dimension "
+                    f"{dim.name!r} (rows 0..{td.num_rows - 1})")
+        if not self.partitions:
+            # retroactive base partition so row provenance covers every row
+            self.partitions.append(Partition(
+                0, start, *self._date_extent(0, start), self.snapshot_id))
+        for name, col in self.fact.columns.items():
+            col.data, col.vocab = staged[name]
+        end = self.fact.num_rows
+        if snapshot_id:
+            self.snapshot_id = snapshot_id
+        part = Partition(start, end, *self._date_extent(start, end),
+                         self.snapshot_id)
+        self.partitions.append(part)
+        self.version += 1
+        if self._device is not None:
+            # fact-aligned device arrays are stale (rebuilt lazily); the
+            # dimension uploads survive — dimension tables are immutable
+            # across appends, and keeping them is what lets a delta tick
+            # upload only delta-sized fact data
+            self._device.drop_fact_arrays()
+        return part
+
+    def _date_extent(self, start: int, end: int):
+        """[start, end) date coverage of a fact row range on the schema's
+        date column — ISO inclusive start / exclusive end, (None, None) when
+        the schema has no date column or the range is empty."""
+        date_col = self.schema.fact.date_column
+        if date_col is None or end <= start:
+            return None, None
+        days = self.fact.columns[date_col].data[start:end]
+        return days_to_date(int(days.min())), days_to_date(int(days.max()) + 1)
+
+    def slice_rows(self, start: int, end: int) -> "Dataset":
+        """View dataset over fact rows [start, end) sharing the dimension
+        tables — the delta-scan storage for incremental refresh.  Column
+        arrays are numpy views (no copies); the slice gets its own device
+        mirror, which uploads only delta-sized fact columns (dimension
+        uploads can be shared from the parent's mirror via
+        ``DeviceDataset.share_dim_arrays``)."""
+        fact = TableData(self.fact.name, {
+            n: ColumnData(c.dtype, c.data[start:end], c.vocab)
+            for n, c in self.fact.columns.items()})
+        return Dataset(self.schema, fact, self.dims, snapshot_id=self.snapshot_id)
 
     # ------------------------------------------------------------- accessors
     def table(self, name: str) -> TableData:
@@ -240,6 +389,27 @@ class DeviceDataset:
             ("aligned32", qualified),
             lambda: self.fact_aligned(qualified).astype(self._jnp.float32),
         )
+
+    def drop_fact_arrays(self) -> None:
+        """Drop every fact-aligned/derived device array (they are stale
+        after a fact append), keeping only the dimension-column uploads —
+        dimension tables are immutable, so the next scan re-uploads fact
+        data only."""
+        self._store = {k: v for k, v in self._store.items()
+                       if k[0] == "dimcol"}
+
+    def share_dim_arrays(self, other: "DeviceDataset") -> None:
+        """Seed this mirror with another mirror's dimension-column uploads.
+        Valid whenever both datasets share the same dimension tables (row
+        slices do): ``('dimcol', ...)`` entries are aligned to dimension
+        rows, never to fact rows, so a delta-slice mirror reuses them as-is
+        and only uploads its own (delta-sized) fact columns."""
+        if other.ds.dims is not self.ds.dims:
+            raise ValueError("device dim arrays can only be shared between "
+                             "mirrors of the same dimension tables")
+        for key, v in other._store.items():
+            if key[0] == "dimcol":
+                self._store.setdefault(key, v)
 
     def nbytes(self) -> int:
         return int(sum(getattr(v, "nbytes", 0) for v in self._store.values()))

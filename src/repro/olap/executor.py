@@ -91,6 +91,7 @@ class OlapExecutor:
         self._mplans: dict[tuple, _MeasurePlan] = {}
         self._exact_cols: dict[str, bool] = {}
         self._nan_cols: dict[str, bool] = {}
+        self._ds_version = getattr(dataset, "version", 0)
         self.executions = 0
         self.rows_scanned = 0
         self.batch_calls = 0  # execute_batch invocations (service miss planner)
@@ -100,15 +101,36 @@ class OlapExecutor:
     def dev(self):
         return self.ds.device()
 
+    def _sync(self) -> None:
+        """Resynchronize with the dataset after appends: every memoized plan
+        (level codes, group ids, rect layouts, measure blocks, predicate
+        exactness/NaN probes) is row-aligned or value-dependent, so a version
+        bump invalidates all of them.  The device mirror itself was already
+        dropped by ``Dataset.append_rows``."""
+        v = getattr(self.ds, "version", 0)
+        if v != self._ds_version:
+            self._level_cache.clear()
+            self._gids_cache.clear()
+            self._rect_cache.clear()
+            self._mplans.clear()
+            self._exact_cols.clear()
+            self._nan_cols.clear()
+            self._ds_version = v
+
     # ------------------------------------------------------------------ api
     def execute(self, sig: Signature) -> ResultTable:
+        self._sync()
         self.executions += 1
         self.rows_scanned += self.ds.fact.num_rows
         if self.fused:
             return self._execute_fused(sig)
         return self._execute_host(sig)
 
-    def execute_batch(self, sigs: Sequence[Signature]) -> list[ResultTable]:
+    def execute_batch(
+        self,
+        sigs: Sequence[Signature],
+        partition: Optional[tuple[int, int]] = None,
+    ) -> list[ResultTable]:
         """Shared-scan batched execution (the dashboard-refresh scenario).
 
         Signatures are grouped by (levels, measures); each group that differs
@@ -120,10 +142,26 @@ class OlapExecutor:
         shared scan, not once per signature.  Results match ``execute`` per
         signature exactly; COUNT DISTINCT or singleton groups fall back to
         the single-query path.
+
+        ``partition=(start, end)`` bounds the scan to that fact row range
+        (the incremental-refresh delta scan): execution is delegated to a
+        sub-executor over a row-slice view of the dataset, so only the delta
+        rows are uploaded and reduced — cost proportional to the delta, not
+        the table.
         """
         sigs = list(sigs)
         if not sigs:
             return []
+        self._sync()
+        if partition is not None:
+            sub = self._partition_executor(*partition)
+            out = sub.execute_batch(sigs)
+            # the sub-executor is fresh: its counters are exactly this call's
+            self.executions += sub.executions
+            self.rows_scanned += sub.rows_scanned
+            self.batch_calls += sub.batch_calls
+            self.batch_groups += sub.batch_groups
+            return out
         self.batch_calls += 1
         out: list[Optional[ResultTable]] = [None] * len(sigs)
         if not self.fused:
@@ -170,6 +208,19 @@ class OlapExecutor:
                     None if mms is None else mms[s_i],
                     gids_np, n_groups, sparse_uniq)
         return out  # type: ignore[return-value]
+
+    def _partition_executor(self, start: int, end: int) -> "OlapExecutor":
+        """Fresh executor over fact rows [start, end).  Each delta partition
+        is scanned once per refresh, so the executor itself is not memoized —
+        cross-tick reuse comes from the global jit cache (delta ticks of
+        similar size hit the same compiled shapes via the pow2 rect padding)
+        and from sharing the parent mirror's dimension uploads, so the tick
+        uploads only delta-sized fact columns."""
+        sub = OlapExecutor(self.ds.slice_rows(start, end),
+                           impl=self.impl, fused=self.fused)
+        if self.fused and self.ds._device is not None:
+            sub.ds.device().share_dim_arrays(self.ds._device)
+        return sub
 
     def execute_raw(self, sql: str) -> Optional[ResultTable]:
         """Bypass path: out-of-scope requests run directly on the backend.
@@ -288,9 +339,19 @@ class OlapExecutor:
             return self._rect_cache[key]
         n = len(gids_np)
         counts = np.bincount(gids_np, minlength=n_groups)
-        r = int(counts.max()) if n_groups else 0
-        cells = n_groups * r
-        ok = r > 0 and cells <= self._RECT_MAX_CELLS and (
+        r0 = int(counts.max()) if n_groups else 0
+        # pad R to a power of two: repeated delta scans (appends of similar
+        # size) then hit the same jitted shapes instead of recompiling per
+        # tick; pad cells hold the out-of-range index and read as identity.
+        # Padding must respect the same work budget as the skew guard — when
+        # the padded rectangle would blow past it, keep the exact R (shape
+        # stability lost for that combination, work bound kept).
+        r = 1 << (r0 - 1).bit_length() if r0 > 0 else 0
+        if n_groups * r > max(self._RECT_MIN_CELLS, self._RECT_MAX_BLOWUP * n) \
+                or n_groups * r > self._RECT_MAX_CELLS:
+            r = r0  # padding alone must never disqualify a layout
+        cells = n_groups * r0
+        ok = r0 > 0 and n_groups * r <= self._RECT_MAX_CELLS and (
             cells <= self._RECT_MIN_CELLS or cells <= self._RECT_MAX_BLOWUP * n)
         if not ok:
             self._rect_cache[key] = None
@@ -780,7 +841,15 @@ def _intersect_ranges(a: list, b: list) -> list:
 
 
 def _np_segment(values, gids, mask, n_groups, op) -> np.ndarray:
-    """Independent numpy oracle for the segment reduce (no JAX involved)."""
+    """Independent numpy oracle for the segment reduce (no JAX involved).
+
+    MIN/MAX are NaN-aware the same way the kernels' fillers are (via the
+    shared numpy-only ``_extreme_at``): NaN rows are masked out of the
+    ``.at`` scatter and their groups re-poisoned afterwards — a qualifying
+    NaN row still yields a NaN group, matching the device path's NaN
+    propagation, warning-free."""
+    from ..core.derivations import _extreme_at
+
     values = np.asarray(values, np.float64)
     m = values.shape[1]
     sel = np.asarray(mask, bool)
@@ -791,12 +860,7 @@ def _np_segment(values, gids, mask, n_groups, op) -> np.ndarray:
         for j in range(m):
             np.add.at(out[:, j], g, v[:, j])
         return out
-    if op == "min":
-        out = np.full((n_groups, m), np.inf)
-        for j in range(m):
-            np.minimum.at(out[:, j], g, v[:, j])
-        return out
-    out = np.full((n_groups, m), -np.inf)
+    out = np.full((n_groups, m), np.inf if op == "min" else -np.inf)
     for j in range(m):
-        np.maximum.at(out[:, j], g, v[:, j])
+        _extreme_at(op.upper(), v[:, j], g, out[:, j])
     return out

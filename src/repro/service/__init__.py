@@ -4,12 +4,12 @@ request pipeline with per-stage observability, and a miss planner that
 routes batched cache misses through the fused shared-scan backend."""
 
 from .api import (Backend, BatchBackend, QueryRequest, QueryResult,
-                  TenantStats, DEFAULT_TENANT)
+                  RefreshReport, TenantStats, DEFAULT_TENANT)
 from .pipeline import STAGES, run_pipeline
 from .service import CacheService, Tenant
 
 __all__ = [
     "Backend", "BatchBackend", "CacheService", "DEFAULT_TENANT",
-    "QueryRequest", "QueryResult", "STAGES", "Tenant", "TenantStats",
-    "run_pipeline",
+    "QueryRequest", "QueryResult", "RefreshReport", "STAGES", "Tenant",
+    "TenantStats", "run_pipeline",
 ]

@@ -25,9 +25,16 @@ DEFAULT_TENANT = "default"
 class BatchBackend(Backend, Protocol):
     """A backend that can additionally execute a group of signatures as one
     shared scan (``OlapExecutor.execute_batch``).  The miss planner routes
-    multi-miss batches through this entry point when present."""
+    multi-miss batches through this entry point when present.  The optional
+    ``partition=(start_row, end_row)`` bounds the scan to that fact row
+    range — ``advance_snapshot(delta=...)`` relies on it for the incremental
+    delta scan, so wrappers delegating to an ``OlapExecutor`` must pass it
+    through."""
 
-    def execute_batch(self, sigs: Sequence[Signature]) -> list[ResultTable]: ...
+    def execute_batch(
+        self, sigs: Sequence[Signature],
+        partition: Optional[tuple[int, int]] = None,
+    ) -> list[ResultTable]: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +113,7 @@ class QueryResult:
     bypass_reason: Optional[str] = None
     confidence: Optional[float] = None
     source_origin: Optional[str] = None  # origin of the serving cache entry
+    source_snapshot: Optional[str] = None  # data snapshot the served table reflects
     provenance: tuple[str, ...] = ()
     timings_ms: dict[str, float] = dataclasses.field(default_factory=dict)
     batched: bool = False
@@ -132,8 +140,47 @@ class QueryResult:
             d["confidence"] = self.confidence
         if self.source_origin is not None:
             d["source_origin"] = self.source_origin
+        if self.source_snapshot is not None:
+            d["source_snapshot"] = self.source_snapshot
         if include_table and self.table is not None:
             d["table"] = {n: self.table.columns[n].tolist() for n in self.table.names}
+        return d
+
+
+@dataclasses.dataclass
+class RefreshReport:
+    """Outcome of :meth:`CacheService.advance_snapshot`.
+
+    ``refreshed`` entries were brought current by merging a delta-partition
+    aggregate into their cached table (cost proportional to the delta);
+    ``recomputed`` entries were non-composable and re-executed over the full
+    table; ``dropped`` entries were invalidated without replacement;
+    ``unaffected`` closed-window entries stayed untouched.
+    ``delta_rows_scanned`` counts fact rows read by the partition-bounded
+    delta scan alone; ``recompute_rows_scanned`` counts the full-table rows
+    the non-composable fallbacks read (kept separate so the delta metric
+    stays proportional to the delta).
+    """
+
+    tenant: str
+    snapshot_id: str
+    appended_rows: int = 0
+    refreshed: int = 0
+    recomputed: int = 0
+    dropped: int = 0
+    unaffected: int = 0
+    updated_start: Optional[str] = None
+    updated_end: Optional[str] = None
+    delta_rows_scanned: int = 0
+    recompute_rows_scanned: int = 0
+
+    @property
+    def affected(self) -> int:
+        return self.refreshed + self.recomputed + self.dropped
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["affected"] = self.affected
         return d
 
 

@@ -54,6 +54,7 @@ class RequestState:
     confidence: Optional[float] = None
     bypass_reason: Optional[str] = None
     source_origin: Optional[str] = None
+    source_snapshot: Optional[str] = None
     store: bool = True
     # what the execute stage runs for a bypassed request: the raw SQL text,
     # the (validated) signature, or nothing
@@ -230,6 +231,10 @@ def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
             s.status = lr.status
             s.table = lr.table
             s.source_origin = lr.source_origin
+            s.source_snapshot = lr.source_snapshot
+            if lr.source_snapshot is not None:
+                # audit trail: which data snapshot the served table reflects
+                s.provenance.append(f"snapshot:{lr.source_snapshot}")
 
 
 # ---------------------------------------------------- miss planner + execute
@@ -334,6 +339,7 @@ def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
         bypass_reason=s.bypass_reason,
         confidence=s.confidence,
         source_origin=s.source_origin,
+        source_snapshot=s.source_snapshot,
         provenance=tuple(s.provenance),
         timings_ms=dict(s.timings),
         batched=s.batched,

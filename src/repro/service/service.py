@@ -19,17 +19,36 @@ reuses the same staged pipeline as live traffic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 from ..core.cache import SemanticCache
 from ..core.metrics import MetricLayer
 from ..core.nl_canon import NLCanonicalizer
+from ..core.refresh import merge_tables, refreshable
 from ..core.safety import SafetyPolicy
 from ..core.schema import StarSchema
 from ..core.sql_canon import SQLCanonicalizer
 from ..core.validator import SignatureValidator
-from .api import DEFAULT_TENANT, Backend, QueryRequest, QueryResult, TenantStats
+from .api import (DEFAULT_TENANT, Backend, QueryRequest, QueryResult,
+                  RefreshReport, TenantStats)
 from .pipeline import run_pipeline
+
+
+def _accepts_partition(execute_batch) -> bool:
+    """True when a backend's ``execute_batch`` supports the ``partition``
+    kwarg of the current :class:`BatchBackend` protocol — probed *before*
+    appending delta rows, because discovering a pre-partition wrapper via
+    TypeError afterwards would leave the grown dataset with a stale cache."""
+    if execute_batch is None:
+        return False
+    import inspect
+
+    try:
+        params = inspect.signature(execute_batch).parameters
+    except (TypeError, ValueError):  # builtins/C callables: assume current
+        return True
+    return "partition" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
 @dataclasses.dataclass
@@ -141,15 +160,106 @@ class CacheService:
         snapshot_id: str = "",
         updated_start: Optional[str] = None,
         updated_end: Optional[str] = None,
-    ) -> int:
-        """New data arrived for a tenant: bump its snapshot id and drop the
-        entries the update can affect (open-ended windows always; closed
-        windows only when they intersect [updated_start, updated_end)).
-        Returns the number of invalidated entries."""
+        *,
+        delta: Optional[Mapping] = None,
+        refresh: bool = True,
+        recompute_fallbacks: bool = True,
+    ) -> RefreshReport:
+        """New data arrived for a tenant: ingest it and bring the cache
+        current.
+
+        Without ``delta`` this is the §6.2 drop rule: entries the update can
+        affect (open-ended windows always; closed windows only when they
+        intersect [updated_start, updated_end)) are invalidated.
+
+        With ``delta`` — a mapping of fact column name to the new rows'
+        values — the rows are appended to the backend dataset and affected
+        entries are *refreshed in place* instead of dropped: all composable
+        affected signatures are executed as one fused batch over just the
+        delta partition and their delta tables merged into the cached tables
+        (``core.refresh``), so a live dashboard keeps its working set at a
+        cost proportional to the delta.  Non-composable affected entries
+        (AVG / COUNT DISTINCT / HAVING / ORDER BY / LIMIT) are recomputed
+        over the full table (or just dropped when
+        ``recompute_fallbacks=False``).  ``refresh=False`` appends the delta
+        but applies the plain drop rule — the pre-incremental behavior, kept
+        as the benchmark baseline.
+
+        When no update extent is given it is derived from the delta's date
+        column, so closed windows outside the ingested date range survive
+        untouched.
+        """
         t = self.tenant(tenant)
         if snapshot_id:
             t.snapshot_id = snapshot_id
-        return t.cache.invalidate_snapshot(updated_start, updated_end)
+        rep = RefreshReport(tenant=t.name, snapshot_id=t.snapshot_id,
+                            updated_start=updated_start, updated_end=updated_end)
+        if delta is None:
+            before = len(t.cache)
+            rep.dropped = t.cache.invalidate_snapshot(updated_start, updated_end)
+            rep.unaffected = before - rep.dropped
+            return rep
+        ds = getattr(t.backend, "ds", None)
+        if ds is None or not hasattr(ds, "append_rows") \
+                or not _accepts_partition(getattr(t.backend, "execute_batch", None)):
+            # checked before the append: failing *after* rows committed would
+            # leave the cache stale relative to the grown dataset
+            raise TypeError(
+                "advance_snapshot(delta=...) needs an OlapExecutor-style "
+                "backend exposing its Dataset as .ds and a partition-capable "
+                "execute_batch")
+        part = ds.append_rows(delta, snapshot_id=t.snapshot_id)
+        rep.appended_rows = part.num_rows
+        # The delta's actual date extent is ground truth: union it with a
+        # caller-supplied range so a too-narrow claim can never leave an
+        # intersecting entry stale-but-served (ISO strings compare
+        # correctly).  A *half-open* caller range stays as given — one
+        # missing bound means unknown extent, and affected_keys treats that
+        # conservatively (every entry refreshes).
+        if part.date_start is not None:
+            if updated_start is None and updated_end is None:
+                rep.updated_start, rep.updated_end = part.date_start, part.date_end
+            elif updated_start is not None and updated_end is not None:
+                rep.updated_start = min(updated_start, part.date_start)
+                rep.updated_end = max(updated_end, part.date_end)
+        affected = t.cache.affected_keys(rep.updated_start, rep.updated_end)
+        rep.unaffected = len(t.cache) - len(affected)
+        if not refresh:
+            for key in affected:
+                t.cache.drop(key)
+            rep.dropped = len(affected)
+            return rep
+        mergeable, fallback = [], []
+        for k in affected:
+            (mergeable if refreshable(t.cache.entry(k).signature)
+             else fallback).append(k)
+        if mergeable:
+            sigs = [t.cache.entry(k).signature for k in mergeable]
+            rows0 = getattr(t.backend, "rows_scanned", 0)
+            deltas = t.backend.execute_batch(
+                sigs, partition=(part.start_row, part.end_row))
+            rep.delta_rows_scanned = getattr(t.backend, "rows_scanned", 0) - rows0
+            t.stats.backend_executions += len(sigs)
+            for key, sig, dtab in zip(mergeable, sigs, deltas):
+                merged = merge_tables(sig, t.cache.entry(key).table, dtab)
+                t.cache.refresh_entry(key, merged, t.snapshot_id, merged=True)
+            rep.refreshed = len(mergeable)
+        if fallback:
+            if recompute_fallbacks:
+                sigs = [t.cache.entry(k).signature for k in fallback]
+                rows0 = getattr(t.backend, "rows_scanned", 0)
+                tables = t.backend.execute_batch(sigs)
+                rep.recompute_rows_scanned = \
+                    getattr(t.backend, "rows_scanned", 0) - rows0
+                t.stats.backend_executions += len(sigs)
+                for key, table in zip(fallback, tables):
+                    t.cache.refresh_entry(key, table, t.snapshot_id, merged=False)
+                rep.recomputed = len(fallback)
+            else:
+                for key in fallback:
+                    t.cache.drop(key)
+                rep.dropped = len(fallback)
+        return rep
 
     def invalidate(self, tenant: str = DEFAULT_TENANT, *,
                    schema_change: bool = False,

@@ -1,0 +1,525 @@
+"""Incremental snapshot refresh (ISSUE 3).
+
+Tentpole: append-only delta ingest (``Dataset.append_rows`` / partition
+metadata), partition-bounded batch execution, and the ``core.refresh`` merge
+algebra that brings affected cached entries current at delta cost.  The key
+property throughout: a merged table must equal a full recompute of the same
+signature over the grown fact table — zero drift.
+
+Satellites covered here: NaN-clean MIN/MAX oracle + roll-up, ``put``
+overwrite provenance, spill shrink/atomic-manifest behavior, and the merge
+property tests.  The whole module runs with RuntimeWarnings as errors so
+the NaN fixes stay fixed.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import Measure, SemanticCache, Signature, TimeWindow
+from repro.core.refresh import merge_tables, refreshable
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.core.table import ResultTable
+from repro.olap.columnar import ColumnData
+from repro.olap.executor import OlapExecutor
+from repro.workloads import ssb
+
+from benchmarks.bench_refresh import make_delta as _bench_make_delta
+
+pytestmark = pytest.mark.filterwarnings("error::RuntimeWarning")
+
+J = ("JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+     "JOIN customer ON lineorder.lo_custkey = customer.c_key ")
+
+COMPOSABLE = (f"SELECT c_region, SUM(lo_revenue) AS r, COUNT(*) AS n, "
+              f"MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi "
+              f"FROM lineorder {J}GROUP BY c_region")
+
+
+def make_delta(ds, n, seed=0, year=1998):
+    """Seeded wrapper over the benchmark's SSB delta-row generator (one
+    shared implementation; the fact schema only needs updating there)."""
+    return _bench_make_delta(ds, n, np.random.default_rng(seed), year=year)
+
+
+@pytest.fixture()
+def wl():
+    """Fresh (mutable) small SSB per test — appends must never leak into the
+    session-scoped fixtures."""
+    return ssb.build(n_fact=3000, seed=0)
+
+
+# ------------------------------------------------------------ append path
+
+
+class TestAppend:
+    def test_column_append_numeric_and_date_iso(self):
+        c = ColumnData("float", np.asarray([1.0, 2.0]))
+        c.append(np.asarray([3.5]))
+        assert c.data.tolist() == [1.0, 2.0, 3.5]
+        d = ColumnData("date", np.asarray(["1994-01-01"]))
+        d.append(np.asarray(["1994-01-03"]))
+        assert (d.data[1] - d.data[0]) == 2  # ISO converted to days
+
+    def test_column_append_str_reencodes_unseen_vocab(self):
+        c = ColumnData("str", np.asarray(["b", "a", "b"]))
+        old = c.encode_value("b")
+        c.append(np.asarray(["ab", "b"]))  # 'ab' sorts between 'a' and 'b'
+        assert c.vocab.tolist() == ["a", "ab", "b"]
+        assert c.encode_value("b") != old  # codes shifted: full re-encode
+        assert c.decode(c.data).tolist() == ["b", "a", "b", "ab", "b"]
+
+    def test_append_rows_partitions_version_and_extent(self, wl):
+        ds = wl.dataset
+        n0, v0 = ds.fact.num_rows, ds.version
+        part = ds.append_rows(make_delta(ds, 500), snapshot_id="snap1")
+        assert ds.fact.num_rows == n0 + 500 and ds.version == v0 + 1
+        assert (part.start_row, part.end_row) == (n0, n0 + 500)
+        assert part.date_start.startswith("1998-")
+        assert part.date_end > part.date_start  # end exclusive, past max date
+        assert ds.snapshot_id == "snap1"
+        # base partition recorded retroactively, delta partition appended
+        assert [(p.start_row, p.end_row) for p in ds.partitions] == \
+            [(0, n0), (n0, n0 + 500)]
+
+    def test_append_rows_is_atomic_on_bad_values(self, wl):
+        """A mid-delta conversion failure (unparseable date) must leave the
+        dataset fully intact — not ragged columns with half the delta in."""
+        ds = wl.dataset
+        n0, v0 = ds.fact.num_rows, ds.version
+        bad = make_delta(ds, 10)
+        bad["lo_date"] = np.asarray(["1998-01-01"] * 9 + ["not-a-date"])
+        with pytest.raises(ValueError):
+            ds.append_rows(bad)
+        assert ds.fact.num_rows == n0 and ds.version == v0
+        assert all(c.n == n0 for c in ds.fact.columns.values())
+
+    def test_append_rows_rejects_lossy_float_to_int(self, wl):
+        """Fractional values for an int fact column must be rejected at
+        staging, not silently truncated into wrong aggregates."""
+        ds = wl.dataset
+        n0 = ds.fact.num_rows
+        bad = make_delta(ds, 10)
+        bad["lo_quantity"] = bad["lo_quantity"] + 0.5
+        with pytest.raises(ValueError, match="lossy"):
+            ds.append_rows(bad)
+        assert ds.fact.num_rows == n0 and ds.version == 0
+
+    def test_append_rows_rejects_out_of_range_fk(self, wl):
+        """An FK pointing past its dimension would commit fine and crash
+        every later scan's gather — rejected at staging, dataset intact."""
+        ds = wl.dataset
+        n0 = ds.fact.num_rows
+        bad = make_delta(ds, 10)
+        bad["lo_custkey"][3] = ds.dims["customer"].num_rows  # one past the end
+        with pytest.raises(ValueError, match="lo_custkey"):
+            ds.append_rows(bad)
+        assert ds.fact.num_rows == n0 and ds.version == 0
+
+    def test_append_rows_rejects_ragged_and_mismatched(self, wl):
+        ds = wl.dataset
+        delta = make_delta(ds, 10)
+        bad = dict(delta)
+        bad.pop("lo_revenue")
+        with pytest.raises(ValueError, match="missing"):
+            ds.append_rows(bad)
+        bad = dict(delta)
+        bad["lo_revenue"] = bad["lo_revenue"][:5]
+        with pytest.raises(ValueError, match="ragged"):
+            ds.append_rows(bad)
+
+    def test_slice_rows_views_delta_only(self, wl):
+        ds = wl.dataset
+        n0 = ds.fact.num_rows
+        ds.append_rows(make_delta(ds, 200))
+        view = ds.slice_rows(n0, n0 + 200)
+        assert view.fact.num_rows == 200
+        assert view.dims is ds.dims  # dimensions shared, not copied
+        np.testing.assert_array_equal(
+            view.fact.columns["lo_revenue"].data,
+            ds.fact.columns["lo_revenue"].data[n0:])
+
+
+class TestExecutorDelta:
+    def test_executor_resyncs_after_append(self, wl):
+        canon = SQLCanonicalizer(wl.schema)
+        sig = canon.canonicalize(COMPOSABLE)
+        ex = OlapExecutor(wl.dataset, impl="numpy")
+        before = ex.execute(sig)
+        wl.dataset.append_rows(make_delta(wl.dataset, 400))
+        after = ex.execute(sig)  # same executor: caches must resync
+        fresh = OlapExecutor(wl.dataset, impl="numpy").execute(sig)
+        assert after.equals(fresh)
+        assert not after.equals(before)  # the delta visibly changed the result
+
+    def test_append_keeps_dim_uploads_on_device(self, wl):
+        """Fused path: a fact append must not evict the dimension-column
+        uploads — they are dim-row-aligned and immutable, and keeping them
+        is what makes a delta tick upload only delta-sized fact data."""
+        canon = SQLCanonicalizer(wl.schema)
+        # the c_region predicate puts a dimension column on device (encoded
+        # range bounds over the FK-gathered customer column)
+        sig = canon.canonicalize(
+            f"SELECT c_nation, SUM(lo_revenue) AS r, COUNT(*) AS n "
+            f"FROM lineorder {J}WHERE c_region = 'ASIA' GROUP BY c_nation")
+        ex = OlapExecutor(wl.dataset, impl="xla")
+        ex.execute(sig)
+        dev = wl.dataset._device
+        dim_keys = [k for k in dev._store if k[0] == "dimcol"]
+        assert dim_keys  # the customer.c_region upload
+        part = wl.dataset.append_rows(make_delta(wl.dataset, 200))
+        assert wl.dataset._device is dev  # mirror survives the append
+        assert sorted(dev._store) == sorted(dim_keys)  # fact arrays dropped
+        got = ex.execute_batch([sig], partition=(part.start_row, part.end_row))
+        oracle = OlapExecutor(
+            wl.dataset.slice_rows(part.start_row, part.end_row), impl="numpy")
+        assert got[0].equals(oracle.execute(sig))
+
+    @pytest.mark.parametrize("impl", ["numpy", "xla"])
+    def test_partition_bounded_batch_equals_slice_oracle(self, wl, impl):
+        canon = SQLCanonicalizer(wl.schema)
+        sigs = [canon.canonicalize(COMPOSABLE),
+                canon.canonicalize(
+                    f"SELECT c_nation, SUM(lo_revenue) AS r, COUNT(*) AS n, "
+                    f"MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi "
+                    f"FROM lineorder {J}WHERE c_region = 'ASIA' "
+                    f"GROUP BY c_nation")]
+        ds = wl.dataset
+        n0 = ds.fact.num_rows
+        part = ds.append_rows(make_delta(ds, 300))
+        ex = OlapExecutor(ds, impl=impl)
+        rows0 = ex.rows_scanned
+        got = ex.execute_batch(sigs, partition=(part.start_row, part.end_row))
+        # scan cost is proportional to the delta, not the table
+        assert ex.rows_scanned - rows0 <= len(sigs) * 300
+        oracle = OlapExecutor(ds.slice_rows(n0, n0 + 300), impl="numpy")
+        for s, t in zip(sigs, got):
+            assert t.equals(oracle.execute(s))
+
+
+# ----------------------------------------------------------- merge algebra
+
+
+def _sig(measures, levels=("customer.c_region",)):
+    return Signature(schema="ssb", measures=tuple(measures), levels=levels)
+
+
+def _direct(sig, base_rows, delta_rows):
+    """Reference: aggregate base+delta rows directly with plain numpy."""
+    keys = np.concatenate([base_rows[0], delta_rows[0]])
+    vals = np.concatenate([base_rows[1], delta_rows[1]])
+    out_k = np.unique(keys)
+    cols = {sig.levels[0]: out_k}
+    for i, m in enumerate(sig.measures):
+        res = []
+        for k in out_k:
+            sel = vals[keys == k]
+            if m.agg in ("SUM", "COUNT"):
+                res.append(sel.sum())  # NaN propagates, like the executor
+            elif m.agg == "MIN":
+                res.append(sel.min())
+            else:
+                res.append(sel.max())
+        cols[f"m{i}"] = np.asarray(res, np.float64)
+    return ResultTable(cols)
+
+
+class TestMergeAlgebra:
+    def test_refreshable_gate(self):
+        assert refreshable(_sig([Measure("SUM", "x"), Measure("MIN", "x")]))
+        assert not refreshable(_sig([Measure("AVG", "x")]))
+        assert not refreshable(_sig([Measure("COUNT", "x", distinct=True)]))
+        assert not refreshable(
+            _sig([Measure("SUM", "x")]).replace(limit=5))
+
+    def test_merge_group_union_and_extremes(self):
+        sig = _sig([Measure("SUM", "x"), Measure("MIN", "x"),
+                    Measure("MAX", "x"), Measure("COUNT", "*")])
+        base = ResultTable({
+            "customer.c_region": np.asarray(["A", "B"]),
+            "m0": np.asarray([10.0, 4.0]), "m1": np.asarray([1.0, 2.0]),
+            "m2": np.asarray([9.0, 2.0]), "m3": np.asarray([3.0, 1.0])})
+        delta = ResultTable({
+            "customer.c_region": np.asarray(["B", "C"]),
+            "m0": np.asarray([6.0, 7.0]), "m1": np.asarray([0.5, 7.0]),
+            "m2": np.asarray([0.5, 7.0]), "m3": np.asarray([2.0, 1.0])})
+        got = merge_tables(sig, base, delta)
+        assert got.columns["customer.c_region"].tolist() == ["A", "B", "C"]
+        assert got.columns["m0"].tolist() == [10.0, 10.0, 7.0]  # SUM adds
+        assert got.columns["m1"].tolist() == [1.0, 0.5, 7.0]  # MIN combines
+        assert got.columns["m2"].tolist() == [9.0, 2.0, 7.0]  # MAX combines
+        assert got.columns["m3"].tolist() == [3.0, 3.0, 1.0]  # COUNT adds
+
+    def test_merge_nan_poisons_like_recompute(self):
+        """A NaN that reached a cached/delta group value keeps poisoning the
+        merged group — and does so without RuntimeWarnings (module-level
+        filterwarnings turns them into errors)."""
+        sig = _sig([Measure("MIN", "x"), Measure("SUM", "x")])
+        base = ResultTable({
+            "customer.c_region": np.asarray(["A", "B"]),
+            "m0": np.asarray([np.nan, 2.0]), "m1": np.asarray([np.nan, 5.0])})
+        delta = ResultTable({
+            "customer.c_region": np.asarray(["A", "B"]),
+            "m0": np.asarray([1.0, 3.0]), "m1": np.asarray([1.0, 1.0])})
+        got = merge_tables(sig, base, delta)
+        assert np.isnan(got.columns["m0"][0]) and got.columns["m0"][1] == 2.0
+        assert np.isnan(got.columns["m1"][0]) and got.columns["m1"][1] == 6.0
+
+    def test_merge_global_aggregate(self):
+        sig = _sig([Measure("SUM", "x"), Measure("MIN", "x")], levels=())
+        base = ResultTable({"m0": np.asarray([4.0]), "m1": np.asarray([2.0])})
+        delta = ResultTable({"m0": np.asarray([1.5]), "m1": np.asarray([0.5])})
+        got = merge_tables(sig, base, delta)
+        assert got.columns["m0"][0] == 5.5 and got.columns["m1"][0] == 0.5
+
+    def test_merge_rejects_non_composable(self):
+        sig = _sig([Measure("AVG", "x")])
+        t = ResultTable({"customer.c_region": np.asarray(["A"]),
+                         "m0": np.asarray([1.0])})
+        with pytest.raises(ValueError, match="not mergeable"):
+            merge_tables(sig, t, t)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        aggs=st.lists(st.sampled_from(["SUM", "COUNT", "MIN", "MAX"]),
+                      min_size=1, max_size=4),
+        base_n=st.integers(0, 12),
+        delta_n=st.integers(0, 12),
+        data=st.data(),
+    )
+    def test_merge_equals_direct_aggregate_property(self, aggs, base_n,
+                                                    delta_n, data):
+        """merge(base, delta) == aggregate(base rows ++ delta rows) for every
+        composable agg across arbitrary group unions."""
+        if base_n + delta_n == 0:
+            return
+        sig = _sig([Measure(a, "x") for a in aggs])
+        groups = np.asarray(list("ABCDE"))
+
+        def rows(n, tag):
+            k = np.asarray(data.draw(
+                st.lists(st.sampled_from(list("ABCDE")), min_size=n,
+                         max_size=n), label=f"{tag}_keys"))
+            v = np.asarray(data.draw(
+                st.lists(st.floats(-100, 100, allow_nan=False), min_size=n,
+                         max_size=n), label=f"{tag}_vals"))
+            return k, v
+
+        def agg_side(k, v):
+            uk = np.unique(k)
+            cols = {sig.levels[0]: uk}
+            for i, m in enumerate(sig.measures):
+                per = [v[k == g] for g in uk]
+                if m.agg in ("SUM", "COUNT"):
+                    cols[f"m{i}"] = np.asarray([p.sum() for p in per])
+                elif m.agg == "MIN":
+                    cols[f"m{i}"] = np.asarray([p.min() for p in per])
+                else:
+                    cols[f"m{i}"] = np.asarray([p.max() for p in per])
+            return ResultTable(cols)
+
+        bk, bv = rows(base_n, "base")
+        dk, dv = rows(delta_n, "delta")
+        merged = merge_tables(sig, agg_side(bk, bv), agg_side(dk, dv))
+        direct = _direct(sig, (bk, bv), (dk, dv))
+        assert merged.equals(direct)
+
+
+# ------------------------------------------------- end-to-end service path
+
+
+def _service(wl, impl="numpy"):
+    from repro.service import CacheService
+
+    backend = OlapExecutor(wl.dataset, impl=impl)
+    svc = CacheService()
+    svc.register_tenant("t", schema=wl.schema, backend=backend,
+                        cache=SemanticCache(
+                            wl.schema, level_mapper=wl.dataset.level_mapper()))
+    return svc, svc.tenant("t"), backend
+
+
+class TestServiceRefresh:
+    AVG_TILE = (f"SELECT c_region, AVG(lo_quantity) AS q FROM lineorder "
+                f"{J}GROUP BY c_region")
+    TOPK_TILE = (f"SELECT c_nation, SUM(lo_revenue) AS r FROM lineorder "
+                 f"{J}GROUP BY c_nation ORDER BY r DESC LIMIT 3")
+    CLOSED_TILE = (f"SELECT c_region, SUM(lo_revenue) AS r FROM lineorder "
+                   f"{J}WHERE d_year = 1992 GROUP BY c_region")
+
+    def test_refresh_keeps_working_set_and_matches_recompute(self, wl):
+        from repro.service import QueryRequest
+
+        svc, tenant, backend = _service(wl)
+        tiles = [COMPOSABLE, self.AVG_TILE, self.TOPK_TILE, self.CLOSED_TILE]
+        svc.submit_batch([QueryRequest(sql=q, tenant="t") for q in tiles])
+        assert len(tenant.cache) == 4
+        rep = svc.advance_snapshot("t", "snap1",
+                                   delta=make_delta(wl.dataset, 400))
+        # composable windowless tile merged; AVG + ORDER BY/LIMIT recomputed;
+        # the 1992 closed window is outside the 1998 delta extent: untouched
+        assert rep.appended_rows == 400
+        assert rep.refreshed == 1 and rep.recomputed == 2
+        assert rep.dropped == 0 and rep.unaffected == 1
+        assert tenant.cache.stats.refreshes == 1
+        assert tenant.cache.stats.refresh_fallbacks == 2
+        oracle = OlapExecutor(wl.dataset, impl="numpy")
+        served = svc.submit_batch(
+            [QueryRequest(sql=q, tenant="t", read_only=True) for q in tiles])
+        for r in served:
+            assert r.status == "hit_exact"
+            assert r.table.equals(oracle.execute(r.signature),
+                                  ordered=bool(r.signature.order_by))
+        # provenance: refreshed tiles advertise the snapshot they reflect
+        assert served[0].source_snapshot == "snap1"
+        assert "snapshot:snap1" in served[0].provenance
+        assert served[3].source_snapshot == "snap0"  # untouched closed window
+
+    def test_update_extent_unions_with_delta_dates(self, wl):
+        """A caller-claimed update range narrower than the delta's real date
+        extent must not leave intersecting entries stale-but-served: the
+        extent is unioned with ground truth from the appended rows."""
+        from repro.service import QueryRequest
+
+        svc, tenant, _ = _service(wl)
+        svc.submit(QueryRequest(sql=self.CLOSED_TILE, tenant="t"))  # 1992
+        delta = make_delta(wl.dataset, 200, year=1992)
+        rep = svc.advance_snapshot("t", "snap1", "1998-01-01", "1998-02-01",
+                                   delta=delta)
+        assert rep.updated_start <= "1992-12-31" < rep.updated_end
+        assert rep.refreshed == 1 and rep.unaffected == 0
+        oracle = OlapExecutor(wl.dataset, impl="numpy")
+        served = svc.submit(QueryRequest(sql=self.CLOSED_TILE, tenant="t",
+                                         read_only=True))
+        assert served.hit and served.table.equals(
+            oracle.execute(served.signature))
+
+    def test_half_open_extent_stays_conservative(self, wl):
+        """One missing bound means unknown update extent: the delta's own
+        dates must not silently close it, or entries inside the claimed
+        region would be skipped — everything refreshes instead."""
+        from repro.service import QueryRequest
+
+        svc, tenant, _ = _service(wl)
+        svc.submit(QueryRequest(sql=self.CLOSED_TILE, tenant="t"))  # 1992
+        rep = svc.advance_snapshot("t", "snap1", updated_start="2024-01-01",
+                                   delta=make_delta(wl.dataset, 100))
+        assert rep.updated_end is None  # still unknown
+        assert rep.refreshed == 1 and rep.unaffected == 0
+
+    def test_refresh_false_keeps_drop_semantics(self, wl):
+        from repro.service import QueryRequest
+
+        svc, tenant, _ = _service(wl)
+        svc.submit(QueryRequest(sql=COMPOSABLE, tenant="t"))
+        rep = svc.advance_snapshot(
+            "t", "snap1", delta=make_delta(wl.dataset, 100), refresh=False)
+        assert rep.dropped == 1 and rep.refreshed == 0
+        assert len(tenant.cache) == 0
+
+    def test_open_ended_window_is_refreshed(self, wl):
+        svc, tenant, backend = _service(wl)
+        sig = Signature(
+            schema=wl.schema.name,
+            measures=(Measure("SUM", "lineorder.lo_revenue"),),
+            levels=("customer.c_region",),
+            time_window=TimeWindow("1997-01-01", "1999-01-01", open_ended=True))
+        tenant.cache.put(sig, backend.execute(sig), snapshot_id="snap0")
+        rep = svc.advance_snapshot("t", "snap1",
+                                   delta=make_delta(wl.dataset, 300))
+        assert rep.refreshed == 1
+        fresh = OlapExecutor(wl.dataset, impl="numpy").execute(sig)
+        assert tenant.cache.entry(sig.key()).table.equals(fresh)
+        assert tenant.cache.entry(sig.key()).refreshes == 1
+
+
+# ------------------------------------------------- satellite regressions
+
+
+class TestPutOverwriteProvenance:
+    def test_overwrite_updates_origin_and_stored_at(self, wl):
+        canon = SQLCanonicalizer(wl.schema)
+        backend = OlapExecutor(wl.dataset, impl="numpy")
+        cache = SemanticCache(wl.schema)
+        sig = canon.canonicalize(COMPOSABLE)
+        t = backend.execute(sig)
+        cache.put(sig, t, origin="nl", snapshot_id="snap0")
+        e = cache.entry(sig.key())
+        first_stored = e.stored_at
+        cache.put(sig, t, origin="sql", snapshot_id="snap1")
+        assert e.origin == "sql"  # was stuck at 'nl' before the fix
+        assert e.snapshot_id == "snap1"
+        assert e.stored_at >= first_stored  # re-stamped (monotonic clock)
+        assert cache.lookup(sig).source_origin == "sql"
+
+
+class TestSpillShrink:
+    def _fill(self, wl, n):
+        canon = SQLCanonicalizer(wl.schema)
+        backend = OlapExecutor(wl.dataset, impl="numpy")
+        cache = SemanticCache(wl.schema)
+        years = (1993, 1994, 1995, 1996)[:n]
+        for y in years:
+            sig = canon.canonicalize(
+                f"SELECT c_region, SUM(lo_revenue) AS r FROM lineorder "
+                f"{J}WHERE d_year = {y} GROUP BY c_region")
+            cache.put(sig, backend.execute(sig))
+        return cache
+
+    def test_shrinking_respill_removes_stale_entry_files(self, wl, tmp_path):
+        import json
+        import os
+
+        from repro.core.cache import load_cache, save_cache
+
+        spill = str(tmp_path / "spill")
+        assert save_cache(self._fill(wl, 3), spill) == 3
+        assert sum(f.endswith(".npz") for f in os.listdir(spill)) == 3
+        assert save_cache(self._fill(wl, 1), spill) == 1
+        files = sorted(f for f in os.listdir(spill) if f.endswith(".npz"))
+        with open(os.path.join(spill, "manifest.json")) as f:
+            manifest = json.load(f)
+        # exactly the one manifest-listed file survives; the two stale
+        # entries of the larger spill (and any .tmp orphans) are gone
+        assert files == [manifest[0]["file"]]
+        assert not any(f.endswith(".tmp") for f in os.listdir(spill))
+        warm = SemanticCache(wl.schema)
+        assert load_cache(warm, spill) == 1
+
+
+class TestNaNWarningClean:
+    """Satellites 1 & 3: NaN-bearing measures through the numpy MIN/MAX
+    oracle and the roll-up re-aggregation must be warning-clean (the module
+    filter turns RuntimeWarnings into errors) and match a direct recompute."""
+
+    @pytest.fixture()
+    def nan_wl(self):
+        w = ssb.build(n_fact=3000, seed=3)
+        rev = w.dataset.fact.columns["lo_revenue"].data
+        rev[np.random.default_rng(0).random(len(rev)) < 0.05] = np.nan
+        return w
+
+    MINMAX = (f"SELECT c_city, MIN(lo_revenue) AS lo, MAX(lo_revenue) AS hi, "
+              f"SUM(lo_revenue) AS r, COUNT(*) AS n FROM lineorder "
+              f"{J}GROUP BY c_city")
+
+    def test_oracle_minmax_warning_clean(self, nan_wl):
+        canon = SQLCanonicalizer(nan_wl.schema)
+        backend = OlapExecutor(nan_wl.dataset, impl="numpy")
+        sig = canon.canonicalize(self.MINMAX)
+        t = backend.execute(sig)  # raised RuntimeWarning-as-error before fix
+        # NaN groups exist (propagation preserved), but no warnings fired
+        assert any(np.isnan(t.columns["m0"]))
+
+    def test_nan_rollup_equals_recompute(self, nan_wl):
+        canon = SQLCanonicalizer(nan_wl.schema)
+        backend = OlapExecutor(nan_wl.dataset, impl="numpy")
+        cache = SemanticCache(nan_wl.schema,
+                              level_mapper=nan_wl.dataset.level_mapper())
+        fine = canon.canonicalize(self.MINMAX)
+        cache.put(fine, backend.execute(fine))
+        for coarse_lvl in ("c_nation", "c_region"):
+            coarse = canon.canonicalize(
+                self.MINMAX.replace("c_city", coarse_lvl))
+            r = cache.lookup(coarse)
+            assert r.status == "hit_rollup"
+            assert r.table.equals(backend.execute(coarse))

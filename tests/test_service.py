@@ -241,9 +241,10 @@ class TestLifecycle:
         svc, tenant, _ = mk_service(ssb_small)
         svc.submit(QueryRequest(sql=DASHBOARD[7]))  # closed 1993-straddling window
         svc.submit(QueryRequest(sql=DASHBOARD[11]))  # no window: open-ended rule
-        dropped = svc.advance_snapshot("default", "snap1",
-                                       "1993-05-01", "1993-06-01")
-        assert dropped == 2  # window intersects + windowless entry
+        rep = svc.advance_snapshot("default", "snap1",
+                                   "1993-05-01", "1993-06-01")
+        assert rep.dropped == 2  # window intersects + windowless entry
+        assert rep.unaffected == 0 and rep.refreshed == 0
         assert tenant.snapshot_id == "snap1"
 
     def test_invalidate_schema_change_drops_all(self, ssb_small):
