@@ -7,6 +7,18 @@ index (entries matching requested measures with superset dimensions or
 superset filters).  LRU eviction; snapshot-based invalidation where entries
 whose time window intersects updated partitions (or is open-ended) are
 refreshed while closed windows remain valid.
+
+Derivation probes are **indexed**: within a measure-multiset bucket,
+candidates are further keyed by time window (every derivation requires
+window equality), then by exact filter tuple (roll-up requires filter
+equality) and exact level tuple (filter-down requires level equality), with
+set-semantics prefilters for the strict-subset checks.  A lookup therefore
+runs ``plan_rollup``/``plan_filterdown`` only on structurally *viable*
+candidates — bounded by the viable subset, not the bucket — visited in the
+same most-recently-stored-first order as the pre-index linear scan, so hit/
+miss outcomes are unchanged (``indexed_probes=False`` keeps the linear scan
+for differential testing).  Entries carrying HAVING/ORDER BY/LIMIT can never
+serve a derivation and are excluded from the tier-2 index at ``put``.
 """
 from __future__ import annotations
 
@@ -17,8 +29,15 @@ from typing import Optional
 
 from . import derivations as dv
 from .schema import StarSchema
-from .signature import Signature
+from .signature import Signature, TimeWindow
 from .table import ResultTable
+
+
+def _discard(lst: list, item) -> None:
+    try:
+        lst.remove(item)
+    except ValueError:
+        pass
 
 
 @dataclasses.dataclass
@@ -47,6 +66,11 @@ class CacheStats:
     refresh_fallbacks: int = 0  # affected entries replaced by a full recompute
     cross_surface_hits: int = 0  # NL request served by SQL-seeded entry or v.v.
     nl_hits: int = 0
+    # derivation-probe observability: viable candidates visited vs plan
+    # checks actually run (linear scans visit whole buckets; the index visits
+    # only structurally viable candidates)
+    derivation_candidates_scanned: int = 0
+    derivation_plans_attempted: int = 0
 
     @property
     def hits(self) -> int:
@@ -94,6 +118,30 @@ class LookupResult:
     source_snapshot: Optional[str] = None
 
 
+class _TwBucket:
+    """Tier-2 derivation index for one (measure bucket, time window) group:
+    candidates keyed by exact filter tuple (roll-up needs filter equality)
+    and by exact level tuple (filter-down needs level equality)."""
+
+    __slots__ = ("by_filters", "by_levels")
+
+    def __init__(self):
+        self.by_filters: dict[tuple, list[str]] = {}
+        self.by_levels: dict[tuple, list[str]] = {}
+
+
+class _MeasureBucket:
+    """Tier-1 derivation index bucket: every entry sharing a measure
+    multiset, in insertion order (the linear-scan path), plus the tier-2
+    time-window index over the derivation-capable subset."""
+
+    __slots__ = ("order", "by_tw")
+
+    def __init__(self):
+        self.order: list[str] = []
+        self.by_tw: dict[Optional[TimeWindow], _TwBucket] = {}
+
+
 class SemanticCache:
     def __init__(
         self,
@@ -103,6 +151,7 @@ class SemanticCache:
         enable_filterdown: bool = True,
         enable_compose: bool = False,  # beyond-paper: filter-down o roll-up
         level_mapper: Optional[dv.LevelMapper] = None,
+        indexed_probes: bool = True,  # False: pre-index linear scan (testing)
     ):
         self.schema = schema
         self.capacity = capacity
@@ -110,12 +159,17 @@ class SemanticCache:
         self.enable_filterdown = enable_filterdown
         self.enable_compose = enable_compose
         self.level_mapper = level_mapper
+        self.indexed_probes = indexed_probes
         self._entries: "OrderedDict[str, CacheEntry]" = OrderedDict()
-        # derivation candidate index: (scope, measure multiset) -> keys
-        self._by_measures: dict[tuple, list[str]] = {}
-        # reverse map key -> index bucket so eviction/invalidation unindexes
-        # in O(1) instead of scanning every bucket
+        # derivation candidate index: (scope, schema, measure multiset)
+        self._by_measures: dict[tuple, _MeasureBucket] = {}
+        # reverse map key -> (bucket key, signature) so eviction/invalidation
+        # unindexes without scanning every bucket
         self._index_of: dict[str, tuple] = {}
+        # monotonic store sequence per key: the MRU merge order of the
+        # indexed probe (== position in the bucket's insertion-order list)
+        self._seq = 0
+        self._seq_of: dict[str, int] = {}
         self.stats = CacheStats()
 
     # ------------------------------------------------------------------- api
@@ -131,44 +185,118 @@ class SemanticCache:
             return LookupResult("hit_exact", entry.table, key, entry.origin,
                                 entry.snapshot_id)
 
-        # derivation pass over candidates sharing the measure multiset,
-        # most-recently-used first
-        idx_key = (sig.scope, sig.schema, sig.measure_key())
-        for cand_key in reversed(self._by_measures.get(idx_key, ())):
+        # derivation pass: only post-aggregation-free requests can be served
+        # by a derivation (every planner requires it), and only candidates
+        # sharing the measure multiset are admissible
+        bucket = self._by_measures.get((sig.scope, sig.schema, sig.measure_key()))
+        if bucket is not None and dv.no_postagg(sig) and (
+                self.enable_rollup or self.enable_filterdown or self.enable_compose):
+            probe = self._probe_indexed if self.indexed_probes else self._probe_linear
+            hit = probe(sig, request_origin, bucket)
+            if hit is not None:
+                return hit
+        self.stats.misses += 1
+        return LookupResult("miss", None)
+
+    # ------------------------------------------------------ derivation probes
+    def _attempt(self, sig: Signature, cand_key: str, cand: CacheEntry,
+                 kind: str, request_origin: str) -> Optional[LookupResult]:
+        """Run one derivation plan+apply; None when it doesn't pan out."""
+        self.stats.derivation_plans_attempted += 1
+        if kind == "rollup":
+            plan = dv.plan_rollup(sig, cand.signature, self.schema, cand_key)
+            if plan is None:
+                return None
+            derived = dv.apply_rollup(plan, sig, cand.signature, cand.table,
+                                      self.level_mapper)
+            if derived is None:
+                return None
+            self._touch(cand_key, cand, request_origin)
+            self.stats.hits_rollup += 1
+            return LookupResult("hit_rollup", derived, cand_key, cand.origin,
+                                cand.snapshot_id)
+        if kind == "filterdown":
+            plan = dv.plan_filterdown(sig, cand.signature, self.schema, cand_key)
+            if plan is None:
+                return None
+            derived = dv.apply_filterdown(plan, sig, cand.signature, cand.table)
+            self._touch(cand_key, cand, request_origin)
+            self.stats.hits_filterdown += 1
+            return LookupResult("hit_filterdown", derived, cand_key,
+                                cand.origin, cand.snapshot_id)
+        plan = dv.plan_compose(sig, cand.signature, self.schema, cand_key)
+        if plan is None:
+            return None
+        derived = dv.apply_compose(plan, sig, cand.signature, cand.table,
+                                   self.level_mapper)
+        if derived is None:
+            return None
+        self._touch(cand_key, cand, request_origin)
+        self.stats.hits_compose += 1
+        return LookupResult("hit_compose", derived, cand_key, cand.origin,
+                            cand.snapshot_id)
+
+    def _probe_indexed(self, sig: Signature, request_origin: str,
+                       bucket: _MeasureBucket) -> Optional[LookupResult]:
+        """Gather the structurally viable candidates through the tier-2
+        index, then try plans most-recently-stored first — the same visit
+        order as the linear scan, restricted to candidates that can pass the
+        planners' structural preconditions.  The three viability classes are
+        mutually exclusive per candidate (filter equality vs strict subset;
+        level equality vs inequality), mirroring the per-candidate
+        rollup -> filterdown -> compose priority of the linear scan."""
+        twb = bucket.by_tw.get(sig.time_window)
+        if twb is None:
+            return None
+        seq = self._seq_of
+        composable = sig.all_composable()
+        cands: list[tuple[int, str, str]] = []
+        if self.enable_rollup and composable:
+            for k in twb.by_filters.get(sig.filters, ()):
+                if self._entries[k].signature.levels != sig.levels:
+                    cands.append((seq.get(k, 0), k, "rollup"))
+        req_fs = sig.filters_frozen()
+        if self.enable_filterdown:
+            for k in twb.by_levels.get(sig.levels, ()):
+                if self._entries[k].signature.filters_frozen() < req_fs:
+                    cands.append((seq.get(k, 0), k, "filterdown"))
+        if self.enable_compose and composable:
+            for ftup, keys in twb.by_filters.items():
+                if not frozenset(ftup) < req_fs:
+                    continue
+                for k in keys:
+                    if self._entries[k].signature.levels != sig.levels:
+                        cands.append((seq.get(k, 0), k, "compose"))
+        cands.sort(reverse=True)
+        self.stats.derivation_candidates_scanned += len(cands)
+        for _, cand_key, kind in cands:
             cand = self._entries.get(cand_key)
             if cand is None:
                 continue
-            if self.enable_rollup:
-                plan = dv.plan_rollup(sig, cand.signature, self.schema, cand_key)
-                if plan is not None:
-                    derived = dv.apply_rollup(
-                        plan, sig, cand.signature, cand.table, self.level_mapper
-                    )
-                    if derived is not None:
-                        self._touch(cand_key, cand, request_origin)
-                        self.stats.hits_rollup += 1
-                        return LookupResult("hit_rollup", derived, cand_key,
-                                            cand.origin, cand.snapshot_id)
-            if self.enable_filterdown:
-                plan = dv.plan_filterdown(sig, cand.signature, self.schema, cand_key)
-                if plan is not None:
-                    derived = dv.apply_filterdown(plan, sig, cand.signature, cand.table)
-                    self._touch(cand_key, cand, request_origin)
-                    self.stats.hits_filterdown += 1
-                    return LookupResult("hit_filterdown", derived, cand_key,
-                                        cand.origin, cand.snapshot_id)
-            if self.enable_compose:
-                plan = dv.plan_compose(sig, cand.signature, self.schema, cand_key)
-                if plan is not None:
-                    derived = dv.apply_compose(
-                        plan, sig, cand.signature, cand.table, self.level_mapper)
-                    if derived is not None:
-                        self._touch(cand_key, cand, request_origin)
-                        self.stats.hits_compose += 1
-                        return LookupResult("hit_compose", derived, cand_key,
-                                            cand.origin, cand.snapshot_id)
-        self.stats.misses += 1
-        return LookupResult("miss", None)
+            hit = self._attempt(sig, cand_key, cand, kind, request_origin)
+            if hit is not None:
+                return hit
+        return None
+
+    def _probe_linear(self, sig: Signature, request_origin: str,
+                      bucket: _MeasureBucket) -> Optional[LookupResult]:
+        """Pre-index behavior: walk the whole measure bucket most-recently-
+        stored first, trying every derivation on every candidate.  Kept as
+        the differential-testing oracle for the indexed probe."""
+        for cand_key in reversed(bucket.order):
+            cand = self._entries.get(cand_key)
+            if cand is None:
+                continue
+            self.stats.derivation_candidates_scanned += 1
+            for kind, enabled in (("rollup", self.enable_rollup),
+                                  ("filterdown", self.enable_filterdown),
+                                  ("compose", self.enable_compose)):
+                if not enabled:
+                    continue
+                hit = self._attempt(sig, cand_key, cand, kind, request_origin)
+                if hit is not None:
+                    return hit
+        return None
 
     def put(
         self,
@@ -191,8 +319,17 @@ class SemanticCache:
             return key
         self._entries[key] = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
         idx_key = (sig.scope, sig.schema, sig.measure_key())
-        self._by_measures.setdefault(idx_key, []).append(key)
-        self._index_of[key] = idx_key
+        bucket = self._by_measures.setdefault(idx_key, _MeasureBucket())
+        bucket.order.append(key)
+        self._seq += 1
+        self._seq_of[key] = self._seq
+        if dv.no_postagg(sig):
+            # entries with HAVING/ORDER BY/LIMIT can never serve a
+            # derivation; they stay out of the tier-2 viability index
+            twb = bucket.by_tw.setdefault(sig.time_window, _TwBucket())
+            twb.by_filters.setdefault(sig.filters, []).append(key)
+            twb.by_levels.setdefault(sig.levels, []).append(key)
+        self._index_of[key] = (idx_key, sig)
         self.stats.stores += 1
         while self.capacity is not None and len(self._entries) > self.capacity:
             self._evict_lru()
@@ -264,6 +401,7 @@ class SemanticCache:
         self._entries.clear()
         self._by_measures.clear()
         self._index_of.clear()
+        self._seq_of.clear()
         self.stats.invalidations += n
         return n
 
@@ -287,17 +425,28 @@ class SemanticCache:
             self._unindex(key)
 
     def _unindex(self, key: str) -> None:
-        idx_key = self._index_of.pop(key, None)
-        if idx_key is None:
+        rec = self._index_of.pop(key, None)
+        if rec is None:
             return
-        keys = self._by_measures.get(idx_key)
-        if keys is not None:
-            try:
-                keys.remove(key)
-            except ValueError:
-                pass
-            if not keys:
-                del self._by_measures[idx_key]
+        idx_key, sig = rec
+        self._seq_of.pop(key, None)
+        bucket = self._by_measures.get(idx_key)
+        if bucket is None:
+            return
+        _discard(bucket.order, key)
+        twb = bucket.by_tw.get(sig.time_window)
+        if twb is not None:
+            for sub, sub_key in ((twb.by_filters, sig.filters),
+                                 (twb.by_levels, sig.levels)):
+                lst = sub.get(sub_key)
+                if lst is not None:
+                    _discard(lst, key)
+                    if not lst:
+                        del sub[sub_key]
+            if not twb.by_filters and not twb.by_levels:
+                del bucket.by_tw[sig.time_window]
+        if not bucket.order:
+            del self._by_measures[idx_key]
 
     # ---------------------------------------------------------- introspection
     def entry(self, key: str) -> Optional[CacheEntry]:

@@ -45,8 +45,13 @@ class DerivationPlan:
     measure_map: tuple[int, ...] = ()
 
 
-def _no_postagg(sig: Signature) -> bool:
+def no_postagg(sig: Signature) -> bool:
+    """True when a signature carries no HAVING/ORDER BY/LIMIT — the shared
+    precondition of every derivation (the cache's index prefilters on it)."""
     return not sig.having and not sig.order_by and sig.limit is None
+
+
+_no_postagg = no_postagg  # internal alias (pre-index name)
 
 
 def _match_measures(requested: Signature, cached: Signature) -> Optional[tuple[int, ...]]:
@@ -104,7 +109,25 @@ def plan_rollup(
 
 def _finer_source(coarse: str, cached_levels: tuple[str, ...], schema: StarSchema) -> Optional[str]:
     """Find a cached level that is a strict descendant of ``coarse`` within a
-    summarizable hierarchy of the same dimension (precondition ii)."""
+    summarizable hierarchy of the same dimension (precondition ii).
+
+    Memoized *on the schema instance* (the level lattice is a pure function
+    of the frozen schema, and roll-up planning re-asks the same (coarse,
+    cached-levels) pairs for every probe of a recurring dashboard intent) —
+    a schema-keyed global cache would both pin dead schemas process-wide and
+    re-hash the whole nested schema per probe."""
+    memo = schema.__dict__.get("_lattice_memo")
+    if memo is None:
+        memo = {}
+        object.__setattr__(schema, "_lattice_memo", memo)
+    k = (coarse, cached_levels)
+    if k not in memo:
+        memo[k] = _finer_source_cold(coarse, cached_levels, schema)
+    return memo[k]
+
+
+def _finer_source_cold(coarse: str, cached_levels: tuple[str, ...],
+                       schema: StarSchema) -> Optional[str]:
     if "." not in coarse:
         return None
     dim_name, col = coarse.split(".", 1)
@@ -244,8 +267,9 @@ def plan_filterdown(
         return None
     if requested.time_window != cached.time_window:
         return None
-    extra = set(requested.filters) - set(cached.filters)
-    if not extra or set(cached.filters) - set(requested.filters):
+    req_fs, c_fs = requested.filters_frozen(), cached.filters_frozen()
+    extra = req_fs - c_fs
+    if not extra or c_fs - req_fs:
         return None  # must be a strict tightening
     # precondition (i): every extra filter attribute must be present among the
     # cached grouping columns (the only attributes the cached result retains)
@@ -277,8 +301,9 @@ def plan_compose(
         return None
     if requested.time_window != cached.time_window:
         return None
-    extra = set(requested.filters) - set(cached.filters)
-    if not extra or set(cached.filters) - set(requested.filters):
+    req_fs, c_fs = requested.filters_frozen(), cached.filters_frozen()
+    extra = req_fs - c_fs
+    if not extra or c_fs - req_fs:
         return None
     for f in extra:
         if f.col not in cached.levels:

@@ -120,6 +120,12 @@ class SemanticCacheMiddleware:
     snapshot_id = _tenant_attr("snapshot_id")
     del _tenant_attr
 
+    def service_stats(self) -> dict:
+        """Structured front-end observability for this tenant: per-stage
+        p50/p95, template-cache and NL-memo counters, derivation-probe
+        counters (see :meth:`repro.service.CacheService.stats`)."""
+        return self.service.stats(self._tenant.name)
+
     # ------------------------------------------------------------------ SQL
     def query_sql(self, sql: str, scope: Optional[str] = None) -> Response:
         from ..service.api import QueryRequest

@@ -5,6 +5,15 @@ measures, grouping levels, filters, time window, post-aggregation operators,
 and (optionally) a governed metric identity and tenant scope.  It serializes
 to canonical JSON (sorted keys, normalized lists) and hashes with SHA-256 to a
 fixed-length cache key, so different surface forms map to the same key.
+
+Signatures are frozen after construction, so every derived form — the
+canonical JSON, the SHA-256 key, the measure multiset, the filter set — is
+*interned* on the instance the first time it is asked for and reused from
+then on.  A request that flows one Signature object through lookup, miss
+dedup, store, and spill therefore hashes exactly once; template-cache and
+NL-memo hits that return a previously-interned instance hash zero times.
+``key_hash_computations()`` exposes a counting hook so tests can assert the
+one-hash-per-request invariant.
 """
 from __future__ import annotations
 
@@ -18,6 +27,20 @@ COMPOSABLE_AGGS = ("SUM", "COUNT", "MIN", "MAX")  # roll-up-safe (§3.6)
 ALL_AGGS = COMPOSABLE_AGGS + ("AVG", "COUNT_DISTINCT")
 
 _OPS = ("=", "!=", "<", "<=", ">", ">=", "in")
+
+# Counting hook for the interning invariant: incremented only when a key is
+# actually SHA-256'd (memoized re-reads are free).  Tests reset it around a
+# request and assert at most one computation.
+_KEY_COMPUTES = 0
+
+
+def key_hash_computations() -> int:
+    return _KEY_COMPUTES
+
+
+def reset_key_hash_computations() -> None:
+    global _KEY_COMPUTES
+    _KEY_COMPUTES = 0
 
 
 def _canon_value(v: Any) -> Any:
@@ -78,9 +101,15 @@ class Filter:
         if self.op not in _OPS:
             raise ValueError(f"unsupported filter op {self.op!r}")
         object.__setattr__(self, "val", _canon_value(self.val))
+        # the JSON serialization of the (canonical) value is fixed at
+        # construction — sort_key used to re-dump it on every comparison
+        object.__setattr__(
+            self, "_sort_key",
+            (self.col, self.op, json.dumps(self.val, default=str, sort_keys=True)),
+        )
 
     def sort_key(self) -> tuple:
-        return (self.col, self.op, json.dumps(self.val, default=str, sort_keys=True))
+        return self._sort_key
 
     def to_json(self) -> dict:
         v = self.val
@@ -175,6 +204,16 @@ class Signature:
         object.__setattr__(
             self, "having", tuple(sorted(self.having, key=lambda h: (h.measure, h.op, str(h.val))))
         )
+        # set-semantics view of the filters, used by the derivation planners'
+        # subset checks (Filter is frozen/hashable, so no JSON round trip)
+        object.__setattr__(self, "_filters_frozen", frozenset(self.filters))
+
+    def _interned(self, slot: str, compute):
+        cached = self.__dict__.get(slot)
+        if cached is None:
+            cached = compute()
+            object.__setattr__(self, slot, cached)
+        return cached
 
     # ------------------------------------------------------------- canonical
     def to_json(self) -> dict:
@@ -199,11 +238,19 @@ class Signature:
         return d
 
     def canonical_json(self) -> str:
-        return json.dumps(self.to_json(), sort_keys=True, separators=(",", ":"), default=str)
+        return self._interned("_canonical_json", lambda: json.dumps(
+            self.to_json(), sort_keys=True, separators=(",", ":"), default=str))
 
     def key(self) -> str:
-        """SHA-256 over the canonical JSON — the fixed-length cache key."""
-        return hashlib.sha256(self.canonical_json().encode()).hexdigest()
+        """SHA-256 over the canonical JSON — the fixed-length cache key.
+        Interned: computed once per instance (see ``key_hash_computations``)."""
+        k = self.__dict__.get("_key")
+        if k is None:
+            global _KEY_COMPUTES
+            _KEY_COMPUTES += 1
+            k = hashlib.sha256(self.canonical_json().encode()).hexdigest()
+            object.__setattr__(self, "_key", k)
+        return k
 
     # --------------------------------------------------------------- helpers
     def has_order_or_limit(self) -> bool:
@@ -214,10 +261,17 @@ class Signature:
 
     def measure_key(self) -> tuple:
         """Identity of the measure set (used by the derivation index)."""
-        return tuple(sorted((m.agg, m.expr, m.distinct) for m in self.measures))
+        return self._interned("_measure_key", lambda: tuple(
+            sorted((m.agg, m.expr, m.distinct) for m in self.measures)))
+
+    def filters_frozen(self) -> frozenset:
+        """The filters as a frozenset of :class:`Filter` (precomputed at
+        construction) — the derivation planners' subset-check currency."""
+        return self._filters_frozen
 
     def filter_set(self) -> frozenset:
-        return frozenset((f.col, f.op, json.dumps(f.val, default=str)) for f in self.filters)
+        return self._interned("_filter_set", lambda: frozenset(
+            (f.col, f.op, json.dumps(f.val, default=str)) for f in self.filters))
 
     def replace(self, **kw) -> "Signature":
         return dataclasses.replace(self, **kw)

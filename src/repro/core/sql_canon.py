@@ -9,11 +9,25 @@ Raises:
     sqlparse.UnsupportedQuery  — valid SQL outside the subset (cache bypass)
     sqlparse.SQLSyntaxError    — malformed SQL (cache bypass)
     CanonicalizationError      — schema-invalid references (cache bypass)
+
+Request-plane fast path: :class:`SQLCanonicalizer` keeps a **parameterized
+template cache**.  The query text is tokenized once into a literal-free
+fingerprint plus its literal values; the fingerprint keys a cached slotted
+AST (parsed once per template), and each distinct ``(literals, scope)``
+binding memoizes its finished, interned :class:`Signature`.  A verbatim
+dashboard re-arrival costs one dict probe (tier-0 exact-text memo); a
+re-formatted arrival of a known binding costs one tokenize + two dict
+probes; a warm-template arrival with fresh literals rebinds the literal
+slots into the cached AST and re-runs only ``from_ast``.  The rebound parse
+is structurally identical to a cold ``sqlparse.parse`` of the same text
+(property-tested), so the fast path can never produce a different signature
+than the cold path.
 """
 from __future__ import annotations
 
 import datetime as _dt
 import re
+from collections import OrderedDict
 from typing import Optional
 
 from . import sqlparse as sp
@@ -122,14 +136,104 @@ class _WindowAccum:
 # ------------------------------------------------------------- canonicalizer
 
 
+class _Template:
+    """One cached query template: the slotted AST plus a bounded LRU memo of
+    ``(literal_values, scope) -> Signature`` bindings.  Signatures are frozen
+    and interned, so sharing one instance across arrivals is safe (and is
+    what makes repeat traffic hash-free)."""
+
+    __slots__ = ("ast", "bindings")
+
+    def __init__(self, ast: sp.Query):
+        self.ast = ast
+        self.bindings: "OrderedDict[tuple, Signature]" = OrderedDict()
+
+
 class SQLCanonicalizer:
-    def __init__(self, schema: StarSchema):
+    def __init__(
+        self,
+        schema: StarSchema,
+        *,
+        template_cache: bool = True,
+        max_templates: int = 1024,
+        max_bindings_per_template: int = 4096,
+    ):
         self.schema = schema
+        self.template_cache = template_cache
+        self.max_templates = max_templates
+        self.max_bindings = max_bindings_per_template
+        self.max_texts = 4 * max_bindings_per_template
+        self._templates: "OrderedDict[tuple, _Template]" = OrderedDict()
+        # tier-0: exact text -> signature (a verbatim dashboard re-arrival
+        # skips even tokenization; canonicalization is deterministic, so an
+        # identical (text, scope) can only ever produce the identical result)
+        self._text_memo: "OrderedDict[tuple, Signature]" = OrderedDict()
+        # fast-path counters (surfaced by CacheService.stats())
+        self.text_hits = 0         # verbatim repeat: tokenize skipped too
+        self.template_hits = 0     # fingerprint seen before: parse skipped
+        self.template_misses = 0   # cold tokenize + parse
+        self.binding_hits = 0      # memoized (literals, scope): from_ast skipped
+        self.binding_misses = 0    # warm template, fresh literals: rebind + from_ast
 
     # -- public entry
     def canonicalize(self, sql: str, scope: Optional[str] = None) -> Signature:
-        q = sp.parse(sql)
-        return self.from_ast(q, scope=scope)
+        if not self.template_cache:
+            return self.from_ast(sp.parse(sql), scope=scope)
+        tkey = (sql, scope)
+        sig = self._text_memo.get(tkey)
+        if sig is not None:
+            self.text_hits += 1
+            self._text_memo.move_to_end(tkey)
+            return sig
+        sig = self._canonicalize_template(sql, scope)
+        self._text_memo[tkey] = sig
+        if len(self._text_memo) > self.max_texts:
+            self._text_memo.popitem(last=False)
+        return sig
+
+    def _canonicalize_template(self, sql: str, scope: Optional[str]) -> Signature:
+        fp, tokens, values = sp.template_of(sql)
+        tpl = self._templates.get(fp)
+        if tpl is None:
+            self.template_misses += 1
+            ast = sp.parse_slotted(tokens, sql)
+            # cache the template even if from_ast below fails: the *parse* is
+            # sound for every text with this fingerprint, and whether a given
+            # literal binding canonicalizes (e.g. a time value that folds
+            # into a window vs one that doesn't) is decided per binding
+            self._templates[fp] = tpl = _Template(ast)
+            if len(self._templates) > self.max_templates:
+                self._templates.popitem(last=False)
+        else:
+            self.template_hits += 1
+            self._templates.move_to_end(fp)
+        bkey = (values, scope)
+        sig = tpl.bindings.get(bkey)
+        if sig is not None:
+            self.binding_hits += 1
+            tpl.bindings.move_to_end(bkey)
+            return sig
+        self.binding_misses += 1
+        sig = self.from_ast(sp.bind_slots(tpl.ast, values), scope=scope)
+        # only successful canonicalizations are memoized; failures keep
+        # raising per arrival exactly like the cold path
+        tpl.bindings[bkey] = sig
+        if len(tpl.bindings) > self.max_bindings:
+            tpl.bindings.popitem(last=False)
+        return sig
+
+    def template_stats(self) -> dict:
+        """Template-cache counters: per-arrival outcome totals plus the
+        current footprint (templates held, bindings memoized)."""
+        return {
+            "text_hits": self.text_hits,
+            "template_hits": self.template_hits,
+            "template_misses": self.template_misses,
+            "binding_hits": self.binding_hits,
+            "binding_misses": self.binding_misses,
+            "templates": len(self._templates),
+            "bindings": sum(len(t.bindings) for t in self._templates.values()),
+        }
 
     def from_ast(self, q: sp.Query, scope: Optional[str] = None) -> Signature:
         sch = self.schema

@@ -131,6 +131,21 @@ Expr = Union[ColRef, Literal, BinOp, AggCall]
 
 
 @dataclasses.dataclass(frozen=True)
+class Slot:
+    """Literal placeholder in a template AST (see :func:`parse_slotted`).
+
+    ``index`` addresses the i-th num/str token of the query text (every
+    num/str token is consumed as a literal by this grammar, so a sequential
+    counter over consumed literal tokens matches token-stream order).
+    ``negated`` marks a literal that appeared under a leading unary minus;
+    :func:`bind_slots` applies the negation at bind time.
+    """
+
+    index: int
+    negated: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
 class Predicate:
     left: Expr
     op: str  # '=', '!=', '<', '<=', '>', '>=', 'in', 'between'
@@ -168,10 +183,19 @@ class Query:
 
 
 class _Parser:
-    def __init__(self, tokens: list[Token], sql: str):
+    def __init__(self, tokens: list[Token], sql: str, slotted: bool = False):
         self.toks = tokens
         self.sql = sql
         self.i = 0
+        # slot mode: literal tokens become Slot placeholders instead of
+        # converted values (the template-cache cold parse)
+        self._slotted = slotted
+        self._slot_i = 0
+
+    def _take_slot(self) -> int:
+        k = self._slot_i
+        self._slot_i += 1
+        return k
 
     # -- token plumbing
     def peek(self, ahead: int = 0) -> Token:
@@ -248,7 +272,12 @@ class _Parser:
                 order_by.append(self.order_item())
         limit = None
         if self.kw("limit"):
-            limit = int(self.expect("num").value)
+            tok = self.expect("num")
+            # convert even in slot mode so a malformed bound (e.g. LIMIT 5.5)
+            # raises identically on the template path and the cold path
+            limit = int(tok.value)
+            if self._slotted:
+                limit = Slot(self._take_slot())
         self.accept("op", ";")
         t = self.peek()
         if t.kind != "eof":
@@ -366,13 +395,19 @@ class _Parser:
         t = self.peek()
         if t.kind == "num":
             self.next()
+            if self._slotted:
+                return Literal(Slot(self._take_slot()))
             return Literal(float(t.value) if "." in t.value else int(t.value))
         if t.kind == "str":
             self.next()
+            if self._slotted:
+                return Literal(Slot(self._take_slot()))
             return Literal(t.value)
         if t.kind == "op" and t.value == "-":
             self.next()
             n = self.expect("num")
+            if self._slotted:
+                return Literal(Slot(self._take_slot(), negated=True))
             return Literal(-(float(n.value) if "." in n.value else int(n.value)))
         raise SQLSyntaxError(f"expected literal at pos {t.pos}, got {t.value!r}")
 
@@ -433,6 +468,101 @@ class _Parser:
 def parse(sql: str) -> Query:
     """Parse SQL text into a Query AST (raises SQLSyntaxError / UnsupportedQuery)."""
     return _Parser(tokenize(sql), sql).parse()
+
+
+# ------------------------------------------------------- template extraction
+
+_INT_SLOT, _FLOAT_SLOT, _STR_SLOT = "?i", "?f", "?s"
+
+
+def template_of(sql: str) -> tuple[tuple, list[Token], tuple]:
+    """Tokenize once and split the text into structure and literals: returns
+    ``(fingerprint, tokens, literal_values)``.
+
+    The fingerprint is the token stream with each literal token replaced by a
+    *typed* placeholder (int-like and float-like numbers are distinguished —
+    ``1`` and ``1.5`` parse differently under LIMIT), so two texts share a
+    fingerprint iff they differ only in literal values.  Keyword case,
+    whitespace, and comments are already normalized away by the tokenizer.
+    ``literal_values`` converts each num/str token exactly as the parser's
+    ``literal()`` would, in token-stream order — the currency of
+    :func:`bind_slots`.
+    """
+    tokens = tokenize(sql)
+    fp: list = []
+    values: list = []
+    for t in tokens:
+        if t.kind == "num":
+            if "." in t.value:
+                fp.append(_FLOAT_SLOT)
+                values.append(float(t.value))
+            else:
+                fp.append(_INT_SLOT)
+                values.append(int(t.value))
+        elif t.kind == "str":
+            fp.append(_STR_SLOT)
+            values.append(t.value)
+        else:
+            fp.append((t.kind, t.value))
+    return tuple(fp), tokens, tuple(values)
+
+
+def parse_slotted(tokens: list[Token], sql: str) -> Query:
+    """Parse a tokenized query into a *template* AST whose literals are
+    :class:`Slot` placeholders.  Raises exactly like :func:`parse` — parse
+    structure never depends on literal values, only on token kinds, so one
+    slotted parse is valid for every text sharing the fingerprint."""
+    return _Parser(tokens, sql, slotted=True).parse()
+
+
+def bind_slots(q: Query, values) -> Query:
+    """Substitute concrete literal values into a slotted template AST.
+
+    ``bind_slots(parse_slotted(tokenize(sql)), template_of(sql)[2])`` is
+    structurally identical to ``parse(sql)`` (property-tested in
+    tests/test_frontend_fastpath.py) — that equality is the template cache's
+    correctness guarantee.
+    """
+
+    def lit(l: Literal) -> Literal:
+        s = l.value
+        if isinstance(s, Slot):
+            v = values[s.index]
+            return Literal(-v if s.negated else v)
+        return l
+
+    def expr(e: Expr) -> Expr:
+        if isinstance(e, Literal):
+            return lit(e)
+        if isinstance(e, BinOp):
+            return BinOp(e.op, expr(e.left), expr(e.right))
+        if isinstance(e, AggCall):
+            return AggCall(e.func, None if e.arg is None else expr(e.arg), e.distinct)
+        return e  # ColRef: no literals inside
+
+    def pred(p: Predicate) -> Predicate:
+        right = p.right
+        if p.op == "between":
+            lo, hi = right
+            right = (lit(lo), lit(hi))
+        elif p.op == "in":
+            right = [lit(v) for v in right]
+        elif isinstance(right, (Literal, BinOp, AggCall)):
+            right = expr(right)
+        return Predicate(expr(p.left), p.op, right)
+
+    limit = q.limit
+    if isinstance(limit, Slot):
+        limit = values[limit.index]
+    return Query(
+        select=tuple(SelectItem(expr(s.expr), s.alias) for s in q.select),
+        table=q.table, alias=q.alias, joins=q.joins,
+        where=tuple(pred(p) for p in q.where),
+        group_by=q.group_by,
+        having=tuple(pred(p) for p in q.having),
+        order_by=tuple((expr(e), d) for e, d in q.order_by),
+        limit=limit,
+    )
 
 
 def parse_expr(text: str) -> Expr:

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import datetime as _dt
+from collections import OrderedDict
 from typing import Optional
 
 from . import sqlparse as sp
@@ -31,11 +32,30 @@ class ValidationResult:
 
 
 class SignatureValidator:
-    def __init__(self, schema: StarSchema):
+    def __init__(self, schema: StarSchema, memo_capacity: int = 8192):
         self.schema = schema
+        # validation is a pure function of (schema, signature) and the schema
+        # is fixed per validator, so results are memoized by signature value:
+        # repeat dashboard intents (the request-plane hot path) pay one dict
+        # probe instead of re-parsing every measure expression
+        self._memo: "OrderedDict[Signature, ValidationResult]" = OrderedDict()
+        self._memo_capacity = memo_capacity
 
     # ------------------------------------------------------------------ api
     def validate(self, sig: Signature) -> ValidationResult:
+        if self._memo_capacity <= 0:  # memo disabled (benchmark baseline)
+            return self._validate(sig)
+        cached = self._memo.get(sig)
+        if cached is not None:
+            self._memo.move_to_end(sig)
+            return cached
+        result = self._validate(sig)
+        self._memo[sig] = result
+        if len(self._memo) > self._memo_capacity:
+            self._memo.popitem(last=False)
+        return result
+
+    def _validate(self, sig: Signature) -> ValidationResult:
         reasons: list[str] = []
         if sig.schema != self.schema.name:
             return ValidationResult(False, (f"schema mismatch: {sig.schema!r}",))

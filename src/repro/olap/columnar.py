@@ -263,9 +263,16 @@ class Dataset:
     # --------------------------------------------------------- hierarchy map
     def level_mapper(self):
         """Build the LevelMapper used by roll-up derivations: maps fine-level
-        *decoded* values to coarse-level decoded values via the dim table."""
+        *decoded* values to coarse-level decoded values via the dim table.
 
-        def mapper(dim_name: str, fine: str, coarse: str, fine_values: np.ndarray):
+        The fine->coarse LUT for each (dim, fine, coarse) edge of the level
+        lattice is built once and memoized on the closure: dimension tables
+        are immutable after build (``append_rows`` only grows the fact), so
+        re-deriving the mapping on every roll-up probe was pure waste.
+        ``None`` (non-summarizable / unknown column) memoizes too."""
+        luts: dict[tuple[str, str, str], Optional[dict]] = {}
+
+        def _lut(dim_name: str, fine: str, coarse: str) -> Optional[dict]:
             dim = self.dims.get(dim_name)
             if dim is None:
                 return None
@@ -280,6 +287,15 @@ class Dataset:
                 if prev is not None and prev != c:
                     return None  # not summarizable: child with two parents
                 lut[f] = c
+            return lut
+
+        def mapper(dim_name: str, fine: str, coarse: str, fine_values: np.ndarray):
+            edge = (dim_name, fine, coarse)
+            if edge not in luts:
+                luts[edge] = _lut(dim_name, fine, coarse)
+            lut = luts[edge]
+            if lut is None:
+                return None
             try:
                 return np.asarray([lut[v] for v in fine_values])
             except KeyError:

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import datetime as _dt
+from collections import deque
 from typing import Any, Optional, Protocol, Sequence
 
 from ..core.middleware import Backend
@@ -184,11 +185,18 @@ class RefreshReport:
         return d
 
 
+STAGE_SAMPLE_WINDOW = 2048  # per-stage latency samples retained for percentiles
+
+
 @dataclasses.dataclass
 class TenantStats:
     """Per-tenant service counters (cache-level counters live in
     ``SemanticCache.stats``).  A superset of the legacy ``MiddlewareStats``
-    fields so middleware shims can expose it unchanged."""
+    fields so middleware shims can expose it unchanged.
+
+    ``stage_timings`` holds a bounded window of the most recent per-stage
+    wall times (the pipeline's ``timings_ms``) so ``stage_percentiles`` can
+    report front-end p50/p95 without unbounded growth."""
 
     requests: int = 0
     batches: int = 0
@@ -198,6 +206,36 @@ class TenantStats:
     batched_misses: int = 0  # misses served through a shared execute_batch scan
     deduped_misses: int = 0  # in-flight duplicates coalesced onto one execution
     stores: int = 0
+    stage_timings: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
-    def to_dict(self) -> dict[str, int]:
-        return dataclasses.asdict(self)
+    def record_stage_timings(self, timings_ms: dict[str, float]) -> None:
+        for stage, ms in timings_ms.items():
+            window = self.stage_timings.get(stage)
+            if window is None:
+                window = self.stage_timings[stage] = deque(
+                    maxlen=STAGE_SAMPLE_WINDOW)
+            window.append(ms)
+
+    def stage_percentiles(self) -> dict[str, dict[str, float]]:
+        """p50/p95 per pipeline stage over the retained sample window."""
+        out: dict[str, dict[str, float]] = {}
+        for stage, window in self.stage_timings.items():
+            if not window:
+                continue
+            v = sorted(window)
+            out[stage] = {
+                "p50_ms": v[len(v) // 2],
+                "p95_ms": v[min(len(v) - 1, int(len(v) * 0.95))],
+                "n": len(v),
+            }
+        return out
+
+    def to_dict(self) -> dict:
+        # field loop instead of dataclasses.asdict: the raw sample windows
+        # are an implementation detail (and deques are not JSON), and asdict
+        # would deep-copy thousands of retained samples just to drop them
+        d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+             if f.name != "stage_timings"}
+        d["stages_ms"] = self.stage_percentiles()
+        return d

@@ -250,6 +250,10 @@ def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> Non
     for s in states:
         if s.pending:
             t0 = time.perf_counter()
+            # sig.key() is interned: the lookup stage already computed it, so
+            # this (and the store stage's re-read) is a dict probe, not a
+            # second SHA-256 — the one-hash-per-request invariant is
+            # regression-tested via signature.key_hash_computations()
             misses.setdefault(s.sig.key(), []).append(s)
             s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
 
@@ -329,6 +333,7 @@ def _stage_store(tenant: "Tenant", states: list[RequestState]) -> None:
 def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
     if s.status == "bypass":
         tenant.stats.bypasses += 1
+    tenant.stats.record_stage_timings(s.timings)
     return QueryResult(
         status=s.status or "bypass",
         table=s.table,

@@ -274,9 +274,16 @@ class CacheService:
 
     # -------------------------------------------------------------- stats
     def stats(self, tenant: Optional[str] = None) -> dict:
-        """Structured stats: per-tenant service counters + cache counters
-        (the ``to_dict`` forms the satellite task asks for)."""
+        """Structured stats: per-tenant service counters (including per-stage
+        p50/p95 pipeline latency), cache counters (including derivation
+        candidates-scanned vs plans-attempted), and the request-plane
+        front-end counters (SQL template cache, NL memo)."""
         if tenant is not None:
             t = self.tenant(tenant)
-            return {"service": t.stats.to_dict(), "cache": t.cache.stats.to_dict()}
+            d = {"service": t.stats.to_dict(), "cache": t.cache.stats.to_dict(),
+                 "frontend": {"template_cache": t.sql_canon.template_stats()}}
+            if t.nl is not None and hasattr(t.nl, "memo_hits"):
+                d["frontend"]["nl_memo"] = {
+                    "calls": t.nl.calls, "memo_hits": t.nl.memo_hits}
+            return d
         return {name: self.stats(name) for name in self.tenants()}

@@ -1,0 +1,370 @@
+"""Request-plane fast path (ISSUE 4): parameterized template cache,
+interned signature keys, and indexed derivation probes.
+
+The load-bearing invariants:
+
+* template-rebound canonicalization is **bit-identical** to cold-parse
+  canonicalization (same canonical JSON, same key) over workload renders and
+  randomized literals — property-tested;
+* two texts sharing a template but differing in literals never collide
+  (cache-poisoning guard);
+* one request computes the SHA-256 signature key at most once (counting
+  hook), and memoized repeats compute it zero times;
+* the indexed derivation probe attempts plans on a bounded, structurally
+  viable candidate subset with hit/miss outcomes identical to the pre-index
+  linear scan.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+
+from repro.core import signature as sigmod
+from repro.core import sqlparse as sp
+from repro.core.cache import SemanticCache
+from repro.core.signature import Filter, Measure, Signature, TimeWindow
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.core.table import ResultTable
+from repro.workloads.variants import make_variants
+
+_JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+          "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+
+
+def _tile_sql(region: str, qty, year: int, upper: bool = False) -> str:
+    sql = ("SELECT c_region, SUM(lo_revenue) AS rev, COUNT(*) AS n "
+           f"FROM lineorder {_JOINS}"
+           f"WHERE c_region = '{region}' AND lo_quantity < {qty} "
+           f"AND d_year = {year} GROUP BY c_region")
+    return sql.upper().replace(f"'{region.upper()}'", f"'{region}'") if upper else sql
+
+
+# ------------------------------------------------------------ template cache
+
+
+class TestTemplateCache:
+    def test_warm_equals_cold_all_workloads(self, ssb_small, tlc_small, tpcds_small):
+        """Every workload query, canonicalized twice through a warm template
+        cache, matches a cold-parse canonicalizer bit for bit."""
+        for wl in (ssb_small, tlc_small, tpcds_small):
+            fast = SQLCanonicalizer(wl.schema)
+            cold = SQLCanonicalizer(wl.schema, template_cache=False)
+            for i, intent in enumerate(wl.intents):
+                for v in make_variants(intent.sql, wl.schema, n=7, seed=i):
+                    a = fast.canonicalize(v)  # first arrival of this text
+                    b = fast.canonicalize(v)  # verbatim repeat: text memo hit
+                    c = cold.canonicalize(v)
+                    assert a.canonical_json() == c.canonical_json()
+                    assert b is a  # interned instance on memo hit
+            assert fast.template_stats()["text_hits"] > 0
+
+    def test_rebind_fresh_literals_equals_cold(self, ssb_small):
+        fast = SQLCanonicalizer(ssb_small.schema)
+        cold = SQLCanonicalizer(ssb_small.schema, template_cache=False)
+        fast.canonicalize(_tile_sql("ASIA", 25, 1994))  # warms the template
+        sql2 = _tile_sql("EUROPE", 30, 1997)
+        assert fast.canonicalize(sql2).canonical_json() == \
+            cold.canonicalize(sql2).canonical_json()
+        assert fast.template_stats()["template_hits"] == 1
+
+    def test_same_template_different_literals_no_collision(self, ssb_small):
+        """Cache-poisoning guard: the binding memo is keyed by the full
+        literal tuple, so same-template texts keep distinct signatures."""
+        fast = SQLCanonicalizer(ssb_small.schema)
+        a = fast.canonicalize(_tile_sql("ASIA", 25, 1994))
+        b = fast.canonicalize(_tile_sql("ASIA", 26, 1994))
+        c = fast.canonicalize(_tile_sql("EUROPE", 25, 1994))
+        assert len({a.key(), b.key(), c.key()}) == 3
+        f = {x for s in (a, b, c) for x in s.filters if "quantity" in x.col}
+        assert {x.val for x in f} == {25, 26}
+
+    def test_scope_partitions_binding_memo(self, ssb_small):
+        fast = SQLCanonicalizer(ssb_small.schema)
+        sql = _tile_sql("ASIA", 25, 1994)
+        a = fast.canonicalize(sql, scope="t1")
+        b = fast.canonicalize(sql, scope="t2")
+        assert a.key() != b.key() and a.scope == "t1" and b.scope == "t2"
+
+    def test_value_dependent_canonicalization_not_poisoned(self, ssb_small):
+        """Whether a literal folds into a time window depends on its value;
+        two bindings of one template must each get the cold-path answer."""
+        fast = SQLCanonicalizer(ssb_small.schema)
+        cold = SQLCanonicalizer(ssb_small.schema, template_cache=False)
+        base = ("SELECT SUM(lo_revenue) r FROM lineorder "
+                "JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+                "WHERE d_yearmonth = '{v}'")
+        folds = base.format(v="Mar1994")   # folds to a month window
+        stays = base.format(v="notamonth")  # stays an ordinary filter
+        for sql in (folds, stays):
+            assert fast.canonicalize(sql).canonical_json() == \
+                cold.canonicalize(sql).canonical_json()
+        assert fast.canonicalize(folds).time_window is not None
+        assert fast.canonicalize(stays).time_window is None
+
+    def test_errors_raise_identically_warm_and_cold(self, ssb_small):
+        from repro.core.sql_canon import CanonicalizationError
+
+        fast = SQLCanonicalizer(ssb_small.schema)
+        bad = ("SELECT SUM(nonexistent_col) FROM lineorder "
+               "WHERE lo_quantity < {q}")
+        for q in (5, 6):  # second arrival exercises the warm-template path
+            with pytest.raises(CanonicalizationError):
+                fast.canonicalize(bad.format(q=q))
+        with pytest.raises(sp.UnsupportedQuery):
+            fast.canonicalize("SELECT lo_revenue FROM lineorder")
+
+    def test_keyword_case_and_whitespace_share_template(self, ssb_small):
+        fast = SQLCanonicalizer(ssb_small.schema)
+        fast.canonicalize(_tile_sql("ASIA", 25, 1994))
+        fast.canonicalize("  " + _tile_sql("ASIA", 25, 1994).lower() + "  ")
+        s = fast.template_stats()
+        assert s["templates"] == 1 and s["template_hits"] == 1
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        region=st.sampled_from(["ASIA", "EUROPE", "AMERICA", "AFRICA"]),
+        qty=st.one_of(st.integers(0, 60),
+                      st.floats(0.5, 60, allow_nan=False, allow_infinity=False)),
+        year=st.integers(1992, 1998),
+        upper=st.booleans(),
+    )
+    def test_property_rebound_equals_cold(self, ssb_small, region, qty, year, upper):
+        """Template-rebound signatures are bit-identical to cold parses over
+        randomized literals and keyword-case renders.  The fast canonicalizer
+        persists across examples, so most draws hit a warm template."""
+        sql = _tile_sql(region, qty, year, upper=upper)
+        fast = self._shared_fast(ssb_small)
+        cold = SQLCanonicalizer(ssb_small.schema, template_cache=False)
+        a, c = fast.canonicalize(sql), cold.canonicalize(sql)
+        assert a.canonical_json() == c.canonical_json()
+        assert a.key() == c.key()
+        # the slotted parse itself must reproduce the cold AST exactly
+        fp, tokens, values = sp.template_of(sql)
+        assert sp.bind_slots(sp.parse_slotted(tokens, sql), values) == sp.parse(sql)
+
+    _FAST = {}
+
+    def _shared_fast(self, wl) -> SQLCanonicalizer:
+        return self._FAST.setdefault(wl.name, SQLCanonicalizer(wl.schema))
+
+
+# ------------------------------------------------------- interned signatures
+
+
+def _sig(**kw):
+    base = dict(schema="ssb", measures=(Measure("SUM", "lineorder.lo_revenue"),))
+    base.update(kw)
+    return Signature(**base)
+
+
+class TestInterning:
+    def test_key_computed_once_per_instance(self):
+        s = _sig(filters=(Filter("customer.c_region", "=", "ASIA"),))
+        sigmod.reset_key_hash_computations()
+        k1 = s.key()
+        assert sigmod.key_hash_computations() == 1
+        assert s.key() == k1 and s.canonical_json() == s.canonical_json()
+        assert s.measure_key() is s.measure_key()
+        assert s.filter_set() is s.filter_set()
+        assert sigmod.key_hash_computations() == 1
+
+    def test_equal_sigs_same_key_different_instances(self):
+        a = _sig(levels=("customer.c_region",))
+        b = _sig(levels=("customer.c_region",))
+        assert a is not b and a.key() == b.key()
+
+    def test_filters_frozen_matches_filter_tuple(self):
+        f1 = Filter("customer.c_region", "=", "ASIA")
+        f2 = Filter("lineorder.lo_quantity", "<", 25)
+        s = _sig(filters=(f2, f1))
+        assert s.filters_frozen() == frozenset({f1, f2})
+
+    def test_one_hash_per_request_through_service(self, ssb_small):
+        """The regression the satellite task asks for: a full request —
+        canonicalize, lookup, miss dedup, execute, store — hashes once; a
+        memoized repeat (template binding hit -> interned instance) hashes
+        zero times."""
+        from repro.olap.executor import OlapExecutor
+        from repro.service import CacheService, QueryRequest
+
+        svc = CacheService()
+        svc.register_tenant("t", schema=ssb_small.schema,
+                            backend=OlapExecutor(ssb_small.dataset, impl="numpy"))
+        sql = _tile_sql("ASIA", 25, 1994)
+        sigmod.reset_key_hash_computations()
+        r1 = svc.submit(QueryRequest(sql=sql, tenant="t"))
+        assert r1.status == "miss"
+        assert sigmod.key_hash_computations() == 1
+        sigmod.reset_key_hash_computations()
+        r2 = svc.submit(QueryRequest(sql=sql, tenant="t"))
+        assert r2.status == "hit_exact"
+        assert sigmod.key_hash_computations() == 0
+
+    def test_nl_memo_interaction(self, ssb_small):
+        """NL memoization composes with interning: a repeat NL request reuses
+        the memoized NLResult's interned signature (zero hashes) and still
+        cross-serves the SQL-seeded entry."""
+        from repro.core.nl_canon import MemoizedNL, SimulatedLLM
+        from repro.olap.executor import OlapExecutor
+        from repro.service import CacheService, QueryRequest
+
+        svc = CacheService()
+        svc.register_tenant(
+            "t", schema=ssb_small.schema,
+            backend=OlapExecutor(ssb_small.dataset, impl="numpy"),
+            nl=MemoizedNL(SimulatedLLM(ssb_small.vocab, model="oracle")))
+        text = "total revenue by customer region in 1994"
+        r1 = svc.submit(QueryRequest(nl=text, tenant="t"))
+        assert r1.status in ("miss", "bypass")
+        sigmod.reset_key_hash_computations()
+        r2 = svc.submit(QueryRequest(nl=text, tenant="t"))
+        assert sigmod.key_hash_computations() == 0
+        if r1.status == "miss":
+            assert r2.status.startswith("hit")
+
+
+# --------------------------------------------------- indexed derivation probes
+
+
+def _mk_table(levels, n_groups=3, n_measures=1):
+    cols = {}
+    for i, lv in enumerate(levels):
+        cols[lv] = np.asarray([f"v{i}_{g}" for g in range(n_groups)])
+    for m in range(n_measures):
+        cols[f"m{m}"] = np.arange(n_groups, dtype=np.float64) + m
+    return ResultTable(cols)
+
+
+def _populate(cache, n=1100):
+    """>= 1k entries sharing one measure multiset: distinct filter values on
+    a shared (city, nation) grouping, plus a few level/window variants."""
+    tw = TimeWindow("1994-01-01", "1995-01-01")
+    levels = ("customer.c_city", "customer.c_nation")
+    for i in range(n):
+        sig = _sig(levels=levels,
+                   filters=(Filter("lineorder.lo_quantity", "<", i),),
+                   time_window=tw)
+        cache.put(sig, _mk_table(levels))
+    # one coarse entry under a different window (must never serve tw probes)
+    other = _sig(levels=("customer.c_nation",),
+                 filters=(Filter("lineorder.lo_quantity", "<", 7),),
+                 time_window=TimeWindow("1996-01-01", "1997-01-01"))
+    cache.put(other, _mk_table(("customer.c_nation",)))
+    return tw, levels
+
+
+@pytest.fixture(scope="module")
+def big_caches(ssb_small):
+    indexed = SemanticCache(ssb_small.schema, enable_compose=True)
+    linear = SemanticCache(ssb_small.schema, enable_compose=True,
+                           indexed_probes=False)
+    tw, levels = _populate(indexed)
+    _populate(linear)
+    return indexed, linear, tw, levels
+
+
+class TestIndexedDerivations:
+    def _probes(self, tw, levels):
+        return [
+            # roll-up: filters match exactly one entry, coarser level
+            _sig(levels=("customer.c_nation",),
+                 filters=(Filter("lineorder.lo_quantity", "<", 500),),
+                 time_window=tw),
+            # filter-down: same levels, one extra filter on a grouping column
+            _sig(levels=levels,
+                 filters=(Filter("lineorder.lo_quantity", "<", 501),
+                          Filter("customer.c_nation", "=", "v1_0")),
+                 time_window=tw),
+            # compose: coarser level + extra filter on a cached grouping col
+            _sig(levels=("customer.c_nation",),
+                 filters=(Filter("lineorder.lo_quantity", "<", 502),
+                          Filter("customer.c_city", "=", "v0_1")),
+                 time_window=tw),
+            # miss: unknown filter set, different window
+            _sig(levels=levels,
+                 filters=(Filter("lineorder.lo_quantity", "<", 99999),),
+                 time_window=TimeWindow("1990-01-01", "1991-01-01")),
+            # miss: post-aggregated request can never derive
+            _sig(levels=("customer.c_nation",),
+                 filters=(Filter("lineorder.lo_quantity", "<", 500),),
+                 time_window=tw, order_by=(sigmod.OrderKey("measure:0", True),),
+                 limit=3),
+        ]
+
+    def test_outcomes_match_linear_scan(self, big_caches):
+        indexed, linear, tw, levels = big_caches
+        for sig in self._probes(tw, levels):
+            a = indexed.lookup(sig)
+            b = linear.lookup(sig)
+            assert a.status == b.status, sig.canonical_json()
+            assert a.source_key == b.source_key
+            if a.table is not None:
+                assert a.table.equals(b.table)
+        assert indexed.stats.hits_rollup >= 1
+        assert indexed.stats.hits_filterdown >= 1
+        assert indexed.stats.hits_compose >= 1
+
+    def test_bounded_candidate_subset(self, big_caches):
+        """With >= 1k entries in the measure bucket, the indexed probe plans
+        over only the structurally viable few; the linear scan walks the
+        bucket."""
+        indexed, linear, tw, levels = big_caches
+        probe = _sig(levels=("customer.c_nation",),
+                     filters=(Filter("lineorder.lo_quantity", "<", 600),),
+                     time_window=tw)
+        for c in (indexed, linear):
+            c.stats.derivation_candidates_scanned = 0
+            c.stats.derivation_plans_attempted = 0
+            assert c.lookup(probe).status == "hit_rollup"
+        assert indexed.stats.derivation_candidates_scanned <= 4
+        assert indexed.stats.derivation_plans_attempted <= 4
+        assert linear.stats.derivation_candidates_scanned >= 500
+
+    def test_eviction_unindexes_tier2(self, ssb_small):
+        cache = SemanticCache(ssb_small.schema, capacity=4)
+        tw = TimeWindow("1994-01-01", "1995-01-01")
+        levels = ("customer.c_city", "customer.c_nation")
+        for i in range(8):
+            cache.put(_sig(levels=levels,
+                           filters=(Filter("lineorder.lo_quantity", "<", i),),
+                           time_window=tw), _mk_table(levels))
+        assert len(cache) == 4
+        # the evicted entries' filter tuples are gone from every index tier
+        bucket = next(iter(cache._by_measures.values()))
+        assert len(bucket.order) == 4
+        twb = bucket.by_tw[tw]
+        assert sum(len(v) for v in twb.by_filters.values()) == 4
+        assert sum(len(v) for v in twb.by_levels.values()) == 4
+        # probes still work against the survivors
+        probe = _sig(levels=("customer.c_nation",),
+                     filters=(Filter("lineorder.lo_quantity", "<", 6),),
+                     time_window=tw)
+        assert cache.lookup(probe).status == "hit_rollup"
+
+
+# ------------------------------------------------------------- observability
+
+
+def test_service_stats_expose_frontend(ssb_small):
+    from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService, QueryRequest
+
+    svc = CacheService()
+    svc.register_tenant("t", schema=ssb_small.schema,
+                        backend=OlapExecutor(ssb_small.dataset, impl="numpy"))
+    sql = _tile_sql("ASIA", 25, 1994)
+    for _ in range(3):
+        svc.submit(QueryRequest(sql=sql, tenant="t"))
+    svc.submit(QueryRequest(sql="  " + sql.lower(), tenant="t"))  # re-format
+    st_ = svc.stats("t")
+    tc = st_["frontend"]["template_cache"]
+    assert tc["template_misses"] == 1 and tc["text_hits"] == 2
+    assert tc["template_hits"] == 1  # the re-formatted text reused the template
+    stages = st_["service"]["stages_ms"]
+    assert {"canonicalize", "lookup"} <= set(stages)
+    assert stages["lookup"]["n"] == 4 and stages["lookup"]["p50_ms"] >= 0.0
+    cache_stats = st_["cache"]
+    assert "derivation_candidates_scanned" in cache_stats
+    assert "derivation_plans_attempted" in cache_stats
+    import json
+    json.dumps(st_)  # the whole stats payload must stay JSON-serializable
