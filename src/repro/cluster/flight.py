@@ -1,0 +1,58 @@
+"""Single-flight miss deduplication.
+
+When several threads miss on the *same* cold signature concurrently, only
+the first (the **leader**) executes the backend; the rest (**followers**)
+block on the leader's :class:`Flight` and receive the identical result table
+— one scan instead of K racing scans for a popular cold dashboard tile.
+
+A flight is registered under the owning shard's lock at lookup time (the
+miss check and the registration are one atomic step, so two threads can
+never both become leader), and resolved outside any lock: the leader calls
+``complete``/``fail`` through the shard after executing, and followers
+``wait`` with a timeout and fall back to executing themselves if the leader
+died or aborted — dedup is an optimization, never a correctness dependency.
+"""
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:  # pragma: no cover
+    from ..core.table import ResultTable
+    from .shard import CacheShard
+
+DEFAULT_FLIGHT_TIMEOUT_S = 30.0
+
+
+class Flight:
+    """One in-flight miss computation, shared by a leader and its followers."""
+
+    __slots__ = ("key", "shard", "table", "error", "_event")
+
+    def __init__(self, key: str, shard: "CacheShard"):
+        self.key = key
+        self.shard = shard
+        self.table: Optional["ResultTable"] = None
+        self.error: Optional[BaseException] = None
+        self._event = threading.Event()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def ok(self) -> bool:
+        return self._event.is_set() and self.error is None
+
+    def wait(self, timeout: Optional[float] = DEFAULT_FLIGHT_TIMEOUT_S) -> bool:
+        """Block until the leader resolves the flight; False on timeout."""
+        return self._event.wait(timeout)
+
+    # resolution happens through the owning shard (shard.complete_flight /
+    # shard.fail_flight) so deregistration and result publication stay under
+    # one lock; these setters are the shard-internal halves.
+    def _resolve(self, table: Optional["ResultTable"],
+                 error: Optional[BaseException]) -> None:
+        self.table = table
+        self.error = error
+        self._event.set()

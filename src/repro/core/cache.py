@@ -19,13 +19,23 @@ same most-recently-stored-first order as the pre-index linear scan, so hit/
 miss outcomes are unchanged (``indexed_probes=False`` keeps the linear scan
 for differential testing).  Entries carrying HAVING/ORDER BY/LIMIT can never
 serve a derivation and are excluded from the tier-2 index at ``put``.
+
+Accounting is byte-aware: every entry records its table's byte footprint,
+``capacity_bytes`` bounds resident bytes alongside the entry-count
+``capacity`` (LRU evicts until under *both* budgets), and
+``stats.bytes_cached`` / ``stats.bytes_evicted`` expose the gauge/counter
+pair.  Entries also carry global recency stamps so a sharded cluster
+(:mod:`repro.cluster`) can migrate them between shards deterministically
+(``export_entries`` / ``rebuild``).  Instances are single-threaded by
+design; the cluster provides the locking.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import OrderedDict
-from typing import Optional
+from typing import Iterable, Optional
 
 from . import derivations as dv
 from .schema import StarSchema
@@ -40,6 +50,15 @@ def _discard(lst: list, item) -> None:
         pass
 
 
+# Process-wide recency clock for cluster migration: every store and every
+# touch draws a strictly increasing stamp, so entries moved between shards can
+# be interleaved into the target's LRU order (``lru_stamp``) and derivation
+# MRU order (``store_stamp``) deterministically, without comparing wall
+# clocks.  ``itertools.count.__next__`` is atomic under the GIL, so stamps
+# are safe to draw from concurrent shard threads.
+_STAMP = itertools.count(1)
+
+
 @dataclasses.dataclass
 class CacheEntry:
     signature: Signature
@@ -50,6 +69,9 @@ class CacheEntry:
     hits: int = 0
     refreshes: int = 0  # in-place table replacements on snapshot advance
     refreshed_at: Optional[float] = None
+    table_nbytes: int = 0  # byte footprint of .table (capacity_bytes budget)
+    lru_stamp: int = 0  # global recency stamp: last store or touch
+    store_stamp: int = 0  # global stamp of the *first* store (MRU probe order)
 
 
 @dataclasses.dataclass
@@ -71,6 +93,10 @@ class CacheStats:
     # only structurally viable candidates)
     derivation_candidates_scanned: int = 0
     derivation_plans_attempted: int = 0
+    # byte-aware accounting: bytes_cached is a gauge of the current resident
+    # table bytes; bytes_evicted counts bytes removed by LRU eviction
+    bytes_cached: int = 0
+    bytes_evicted: int = 0
 
     @property
     def hits(self) -> int:
@@ -152,9 +178,12 @@ class SemanticCache:
         enable_compose: bool = False,  # beyond-paper: filter-down o roll-up
         level_mapper: Optional[dv.LevelMapper] = None,
         indexed_probes: bool = True,  # False: pre-index linear scan (testing)
+        capacity_bytes: Optional[int] = None,  # max table bytes; None = unbounded
     ):
         self.schema = schema
         self.capacity = capacity
+        self.capacity_bytes = capacity_bytes
+        self._bytes = 0  # resident table bytes (mirrors stats.bytes_cached)
         self.enable_rollup = enable_rollup
         self.enable_filterdown = enable_filterdown
         self.enable_compose = enable_compose
@@ -316,23 +345,20 @@ class SemanticCache:
             e.snapshot_id = snapshot_id
             e.origin = origin
             e.stored_at = time.monotonic()
+            e.lru_stamp = next(_STAMP)
+            self._set_entry_bytes(e, table.nbytes())
+            self._enforce_capacity()
             return key
-        self._entries[key] = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
-        idx_key = (sig.scope, sig.schema, sig.measure_key())
-        bucket = self._by_measures.setdefault(idx_key, _MeasureBucket())
-        bucket.order.append(key)
+        e = CacheEntry(sig, table, origin, snapshot_id, time.monotonic())
+        stamp = next(_STAMP)
+        e.lru_stamp = e.store_stamp = stamp
+        self._entries[key] = e
+        self._set_entry_bytes(e, table.nbytes())
         self._seq += 1
         self._seq_of[key] = self._seq
-        if dv.no_postagg(sig):
-            # entries with HAVING/ORDER BY/LIMIT can never serve a
-            # derivation; they stay out of the tier-2 viability index
-            twb = bucket.by_tw.setdefault(sig.time_window, _TwBucket())
-            twb.by_filters.setdefault(sig.filters, []).append(key)
-            twb.by_levels.setdefault(sig.levels, []).append(key)
-        self._index_of[key] = (idx_key, sig)
+        self._index(key, sig)
         self.stats.stores += 1
-        while self.capacity is not None and len(self._entries) > self.capacity:
-            self._evict_lru()
+        self._enforce_capacity()
         return key
 
     # ----------------------------------------------- invalidation / refresh
@@ -380,6 +406,7 @@ class SemanticCache:
         if e is None:
             raise KeyError(f"cannot refresh unknown entry {key!r}")
         e.table = table
+        self._set_entry_bytes(e, table.nbytes())
         e.snapshot_id = snapshot_id
         e.refreshes += 1
         e.refreshed_at = time.monotonic()
@@ -387,6 +414,9 @@ class SemanticCache:
             self.stats.refreshes += 1
         else:
             self.stats.refresh_fallbacks += 1
+        # delta merges grow tables (group unions), so a refresh can push the
+        # cache over its byte budget just like a put
+        self._enforce_capacity()
 
     def drop(self, key: str) -> bool:
         """Explicitly invalidate one entry by key; True when it existed."""
@@ -402,6 +432,8 @@ class SemanticCache:
         self._by_measures.clear()
         self._index_of.clear()
         self._seq_of.clear()
+        self._bytes = 0
+        self.stats.bytes_cached = 0
         self.stats.invalidations += n
         return n
 
@@ -409,20 +441,53 @@ class SemanticCache:
     def _touch(self, key: str, entry: CacheEntry, request_origin: str) -> None:
         self._entries.move_to_end(key)
         entry.hits += 1
+        entry.lru_stamp = next(_STAMP)
         if request_origin == "nl":
             self.stats.nl_hits += 1
         if request_origin != entry.origin:
             self.stats.cross_surface_hits += 1
 
+    def _set_entry_bytes(self, entry: CacheEntry, nbytes: int) -> None:
+        self._bytes += nbytes - entry.table_nbytes
+        entry.table_nbytes = nbytes
+        self.stats.bytes_cached = self._bytes
+
+    def _index(self, key: str, sig: Signature) -> None:
+        """Insert ``key`` into the derivation candidate index (tier 1 always;
+        tier 2 only for entries that can actually serve a derivation)."""
+        idx_key = (sig.scope, sig.schema, sig.measure_key())
+        bucket = self._by_measures.setdefault(idx_key, _MeasureBucket())
+        bucket.order.append(key)
+        if dv.no_postagg(sig):
+            # entries with HAVING/ORDER BY/LIMIT can never serve a
+            # derivation; they stay out of the tier-2 viability index
+            twb = bucket.by_tw.setdefault(sig.time_window, _TwBucket())
+            twb.by_filters.setdefault(sig.filters, []).append(key)
+            twb.by_levels.setdefault(sig.levels, []).append(key)
+        self._index_of[key] = (idx_key, sig)
+
+    def _enforce_capacity(self) -> None:
+        while self._entries and (
+            (self.capacity is not None and len(self._entries) > self.capacity)
+            or (self.capacity_bytes is not None
+                and self._bytes > self.capacity_bytes)
+        ):
+            self._evict_lru()
+
     def _evict_lru(self) -> None:
-        key, _ = self._entries.popitem(last=False)
+        key, e = self._entries.popitem(last=False)
         self._unindex(key)
+        self._bytes -= e.table_nbytes
+        self.stats.bytes_cached = self._bytes
+        self.stats.bytes_evicted += e.table_nbytes
         self.stats.evictions += 1
 
     def _remove(self, key: str) -> None:
-        if key in self._entries:
-            del self._entries[key]
+        e = self._entries.pop(key, None)
+        if e is not None:
             self._unindex(key)
+            self._bytes -= e.table_nbytes
+            self.stats.bytes_cached = self._bytes
 
     def _unindex(self, key: str) -> None:
         rec = self._index_of.pop(key, None)
@@ -448,6 +513,43 @@ class SemanticCache:
         if not bucket.order:
             del self._by_measures[idx_key]
 
+    # ----------------------------------------------------- cluster migration
+    def export_entries(self) -> list[CacheEntry]:
+        """Live entries in LRU order (least-recently-used first).  Each entry
+        carries its global ``lru_stamp``/``store_stamp``, so a cluster
+        rebalance can deterministically interleave entries from several
+        source shards (see :meth:`rebuild`)."""
+        return list(self._entries.values())
+
+    def rebuild(self, entries: Iterable[CacheEntry]) -> None:
+        """Replace the cache contents with ``entries`` (shard rebalance).
+
+        LRU order is reconstructed from ``lru_stamp`` and the derivation
+        index's most-recently-stored probe order from ``store_stamp`` — the
+        same global clock both stamps were drawn from — so migrated entries
+        keep their recency relative to entries already resident on the target
+        shard.  Entry state (tables, hit counters, snapshot ids) moves
+        untouched; cumulative stats counters are preserved.  Capacity budgets
+        are re-enforced afterwards (a shrink migration can evict, counted as
+        ordinary evictions)."""
+        entries = list(entries)
+        self._entries.clear()
+        self._by_measures.clear()
+        self._index_of.clear()
+        self._seq_of.clear()
+        self._bytes = 0
+        for e in sorted(entries, key=lambda e: e.lru_stamp):
+            self._entries[e.signature.key()] = e
+            self._bytes += e.table_nbytes
+        self._seq = 0
+        for e in sorted(entries, key=lambda e: e.store_stamp):
+            key = e.signature.key()
+            self._seq += 1
+            self._seq_of[key] = self._seq
+            self._index(key, e.signature)
+        self.stats.bytes_cached = self._bytes
+        self._enforce_capacity()
+
     # ---------------------------------------------------------- introspection
     def entry(self, key: str) -> Optional[CacheEntry]:
         return self._entries.get(key)
@@ -456,7 +558,7 @@ class SemanticCache:
         return list(self._entries.keys())
 
     def total_bytes(self) -> int:
-        return sum(e.table.nbytes() for e in self._entries.values())
+        return self._bytes
 
 
 # ------------------------------------------------------------- persistence

@@ -29,6 +29,7 @@ aggregate, never the fact table.
 from __future__ import annotations
 
 import dataclasses
+import threading as _threading
 from typing import Optional, Sequence
 
 import numpy as np
@@ -96,6 +97,17 @@ class OlapExecutor:
         self.rows_scanned = 0
         self.batch_calls = 0  # execute_batch invocations (service miss planner)
         self.batch_groups = 0  # shared-scan groups actually fused across those
+        # the cluster miss planner runs shard groups on concurrent threads;
+        # bare '+=' on shared counters would drop increments
+        self._count_lock = _threading.Lock()
+
+    def _count(self, executions: int = 0, rows_scanned: int = 0,
+               batch_calls: int = 0, batch_groups: int = 0) -> None:
+        with self._count_lock:
+            self.executions += executions
+            self.rows_scanned += rows_scanned
+            self.batch_calls += batch_calls
+            self.batch_groups += batch_groups
 
     @property
     def dev(self):
@@ -120,8 +132,7 @@ class OlapExecutor:
     # ------------------------------------------------------------------ api
     def execute(self, sig: Signature) -> ResultTable:
         self._sync()
-        self.executions += 1
-        self.rows_scanned += self.ds.fact.num_rows
+        self._count(executions=1, rows_scanned=self.ds.fact.num_rows)
         if self.fused:
             return self._execute_fused(sig)
         return self._execute_host(sig)
@@ -157,12 +168,12 @@ class OlapExecutor:
             sub = self._partition_executor(*partition)
             out = sub.execute_batch(sigs)
             # the sub-executor is fresh: its counters are exactly this call's
-            self.executions += sub.executions
-            self.rows_scanned += sub.rows_scanned
-            self.batch_calls += sub.batch_calls
-            self.batch_groups += sub.batch_groups
+            self._count(executions=sub.executions,
+                        rows_scanned=sub.rows_scanned,
+                        batch_calls=sub.batch_calls,
+                        batch_groups=sub.batch_groups)
             return out
-        self.batch_calls += 1
+        self._count(batch_calls=1)
         out: list[Optional[ResultTable]] = [None] * len(sigs)
         if not self.fused:
             return [self.execute(s) for s in sigs]
@@ -186,9 +197,8 @@ class OlapExecutor:
                 continue
             if not idxs:
                 continue
-            self.batch_groups += 1
-            self.executions += len(idxs)
-            self.rows_scanned += self.ds.fact.num_rows  # one shared scan
+            self._count(batch_groups=1, executions=len(idxs),
+                        rows_scanned=self.ds.fact.num_rows)  # one shared scan
             levels = [self._level_plan(lv) for lv in lvls]
             gids_np, n_groups, sparse_uniq = self._group_ids(levels)
             gids_dev = self._device_gids(lvls, gids_np)
@@ -229,8 +239,7 @@ class OlapExecutor:
         try:
             sig = self._canon.canonicalize(sql)
         except (UnsupportedQuery, SQLSyntaxError, CanonicalizationError):
-            self.executions += 1
-            self.rows_scanned += self.ds.fact.num_rows
+            self._count(executions=1, rows_scanned=self.ds.fact.num_rows)
             return None
         return self.execute(sig)
 

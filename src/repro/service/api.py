@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import datetime as _dt
+import threading
 from collections import deque
 from typing import Any, Optional, Protocol, Sequence
 
@@ -185,6 +186,71 @@ class RefreshReport:
         return d
 
 
+class ReadWriteGate:
+    """Many concurrent readers or one exclusive writer.
+
+    Request threads hold the *read* side around backend executions; dataset-
+    mutating lifecycle operations (``advance_snapshot(delta=...)`` appends
+    rows and resyncs executor caches) hold the *write* side — a scan can
+    never observe half-appended columns or a plan-memo flush mid-execution.
+    Writer-preference: an arriving writer blocks new readers, so steady
+    traffic cannot starve a refresh."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    def acquire_read(self) -> None:
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+
+    def release_read(self) -> None:
+        with self._cond:
+            self._readers -= 1
+            if not self._readers:
+                self._cond.notify_all()
+
+    def acquire_write(self) -> None:
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+
+    def release_write(self) -> None:
+        with self._cond:
+            self._writer = False
+            self._cond.notify_all()
+
+    class _Side:
+        __slots__ = ("_acquire", "_release")
+
+        def __init__(self, acquire, release):
+            self._acquire, self._release = acquire, release
+
+        def __enter__(self):
+            self._acquire()
+
+        def __exit__(self, *exc):
+            self._release()
+            return False
+
+    @property
+    def read(self) -> "ReadWriteGate._Side":
+        return self._Side(self.acquire_read, self.release_read)
+
+    @property
+    def write(self) -> "ReadWriteGate._Side":
+        return self._Side(self.acquire_write, self.release_write)
+
+
 STAGE_SAMPLE_WINDOW = 2048  # per-stage latency samples retained for percentiles
 
 
@@ -196,7 +262,13 @@ class TenantStats:
 
     ``stage_timings`` holds a bounded window of the most recent per-stage
     wall times (the pipeline's ``timings_ms``) so ``stage_percentiles`` can
-    report front-end p50/p95 without unbounded growth."""
+    report front-end p50/p95 without unbounded growth.
+
+    Thread safety: the service runs request batches on concurrent caller
+    threads (the sharded-cluster regime), so counters are bumped through
+    :meth:`bump` and the latency reservoirs are guarded by an internal lock —
+    plain field *reads* stay lock-free (single int loads are atomic under the
+    GIL; momentarily torn cross-field views are acceptable for stats)."""
 
     requests: int = 0
     batches: int = 0
@@ -204,23 +276,37 @@ class TenantStats:
     nl_gated: int = 0
     backend_executions: int = 0
     batched_misses: int = 0  # misses served through a shared execute_batch scan
-    deduped_misses: int = 0  # in-flight duplicates coalesced onto one execution
+    deduped_misses: int = 0  # in-batch duplicates coalesced onto one execution
+    coalesced_misses: int = 0  # cross-thread misses served by another's flight
     stores: int = 0
     stage_timings: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, init=False, repr=False, compare=False)
+
+    def bump(self, **deltas: int) -> None:
+        """Atomically add to one or more counter fields.  ``x += n`` on a
+        shared dataclass field is a read-modify-write race under threads;
+        every pipeline/service increment goes through here instead."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
 
     def record_stage_timings(self, timings_ms: dict[str, float]) -> None:
-        for stage, ms in timings_ms.items():
-            window = self.stage_timings.get(stage)
-            if window is None:
-                window = self.stage_timings[stage] = deque(
-                    maxlen=STAGE_SAMPLE_WINDOW)
-            window.append(ms)
+        with self._lock:
+            for stage, ms in timings_ms.items():
+                window = self.stage_timings.get(stage)
+                if window is None:
+                    window = self.stage_timings[stage] = deque(
+                        maxlen=STAGE_SAMPLE_WINDOW)
+                window.append(ms)
 
     def stage_percentiles(self) -> dict[str, dict[str, float]]:
         """p50/p95 per pipeline stage over the retained sample window."""
+        with self._lock:
+            windows = {stage: list(w) for stage, w in self.stage_timings.items()}
         out: dict[str, dict[str, float]] = {}
-        for stage, window in self.stage_timings.items():
+        for stage, window in windows.items():
             if not window:
                 continue
             v = sorted(window)
@@ -233,9 +319,10 @@ class TenantStats:
 
     def to_dict(self) -> dict:
         # field loop instead of dataclasses.asdict: the raw sample windows
-        # are an implementation detail (and deques are not JSON), and asdict
-        # would deep-copy thousands of retained samples just to drop them
+        # and the lock are implementation details (and deques are not JSON);
+        # asdict would deep-copy thousands of retained samples just to drop
+        # them
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
-             if f.name != "stage_timings"}
+             if f.name not in ("stage_timings", "_lock")}
         d["stages_ms"] = self.stage_percentiles()
         return d

@@ -18,6 +18,20 @@ batch-first rather than a loop over the single-query path:
   (one shared scan, a single fused kernel launch per agg block) instead of
   N serial ``execute`` calls.
 
+When the tenant's cache is a :class:`repro.cluster.CacheCluster`, the
+pipeline additionally becomes concurrency-aware:
+
+* **lookup** runs as one scatter-gather batch (one lock acquisition per
+  touched shard) and registers **single-flight** miss deduplication: a miss
+  whose signature is already being computed by another thread *joins* that
+  flight instead of racing the executor;
+* **execute** partitions the batch's miss leaders by shard and runs each
+  shard group's ``execute_batch`` concurrently (the backend's plan memos are
+  idempotent, and its numpy/JAX kernels release the GIL);
+* flight **followers** block on the owning flight after local work is done
+  and fall back to executing themselves if the leader aborted — coalescing
+  is an optimization, never a correctness dependency.
+
 Each stage records its wall time per request; the outcome chain is kept in
 ``provenance`` so every decision is auditable from the ``QueryResult``.
 """
@@ -25,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Optional, TYPE_CHECKING
 
 from ..core.cache import LookupResult
@@ -61,6 +76,11 @@ class RequestState:
     bypass_exec: Optional[str] = None  # 'raw' | 'sig' | None
     batched: bool = False
     deduped: bool = False
+    # single-flight state (cluster caches only): the registered flight for a
+    # miss, and whether this request owns its computation
+    flight: object = None
+    flight_leader: bool = False
+    stored: bool = False  # entry already put (flight leaders store early)
     provenance: list = dataclasses.field(default_factory=list)
     timings: dict = dataclasses.field(default_factory=dict)
 
@@ -81,11 +101,21 @@ class RequestState:
 
 def run_pipeline(tenant: "Tenant", requests: list[QueryRequest]) -> list[QueryResult]:
     states = [RequestState(req=r, origin=r.kind) for r in requests]
-    tenant.stats.requests += len(states)
-    tenant.stats.batches += 1
-    for stage in (_stage_canonicalize, _stage_validate, _stage_gate,
-                  _stage_lookup, _stage_plan_and_execute, _stage_store):
-        stage(tenant, states)
+    tenant.stats.bump(requests=len(states), batches=1)
+    try:
+        for stage in (_stage_canonicalize, _stage_validate, _stage_gate,
+                      _stage_lookup, _stage_plan_and_execute, _stage_store):
+            stage(tenant, states)
+    finally:
+        # never strand a follower: if this batch dies mid-pipeline, every
+        # flight it leads is failed so waiters wake up and fall back to
+        # executing themselves
+        fail = getattr(tenant.cache, "fail_flight", None)
+        if fail is not None:
+            for s in states:
+                if s.flight is not None and s.flight_leader and not s.flight.done:
+                    fail(s.flight,
+                         RuntimeError("pipeline aborted before flight completion"))
     return [_finalize(tenant, s) for s in states]
 
 
@@ -154,7 +184,7 @@ def _canonicalize_nl(tenant: "Tenant", states: list[RequestState]) -> None:
             if sig is not None and s.req.scope is not None:
                 sig = sig.replace(scope=s.req.scope)
             if sig is None:
-                tenant.stats.nl_gated += 1
+                tenant.stats.bump(nl_gated=1)
                 s.bypass(res.error or "canonicalization failed")
                 continue
             s.sig = sig
@@ -176,7 +206,7 @@ def _stage_validate(tenant: "Tenant", states: list[RequestState]) -> None:
             continue
         reason = "; ".join(v.reasons)
         if s.origin == "nl":
-            tenant.stats.nl_gated += 1
+            tenant.stats.bump(nl_gated=1)
             s.bypass(reason)  # invalid NL signature: nothing safe to execute
         else:
             # raw SQL still runs on the backend; metric/signature requests
@@ -196,7 +226,7 @@ def _stage_gate(tenant: "Tenant", states: list[RequestState]) -> None:
             gate = gate_nl(tenant.policy, s.req.nl, s.nl_res, s.req.now)
             s.add_ms("gate", (time.perf_counter() - t0) * 1e3)
             if not gate:
-                tenant.stats.nl_gated += 1
+                tenant.stats.bump(nl_gated=1)
                 # the signature is schema-valid: the bypass still executes it,
                 # it just never touches the cache (§3.5)
                 s.bypass("; ".join(gate.reasons), "sig")
@@ -211,30 +241,55 @@ def _stage_gate(tenant: "Tenant", states: list[RequestState]) -> None:
 
 
 def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
+    todo = []
     for s in states:
         if not s.pending:
             continue
         if s.req.refresh:
             s.provenance.append("lookup:skipped_refresh")
             continue
+        todo.append(s)
+    if not todo:
+        return
+    batch_fn = getattr(tenant.cache, "lookup_or_flight_batch", None)
+    if batch_fn is not None:
+        # cluster cache: scatter-gather over shards (one lock acquisition per
+        # touched shard) with atomic single-flight registration for misses
+        t0 = time.perf_counter()
+        triples = batch_fn([
+            (s.sig, "nl" if s.origin == "nl" else "sql") for s in todo])
+        ms = (time.perf_counter() - t0) * 1e3 / len(todo)
+        for s, (lr, flight, leader) in zip(todo, triples):
+            s.add_ms("lookup", ms)
+            _apply_lookup(tenant, s, lr)
+            if s.pending:
+                s.flight, s.flight_leader = flight, leader
+        return
+    for s in todo:
         t0 = time.perf_counter()
         lr: LookupResult = tenant.cache.lookup(
             s.sig, request_origin="nl" if s.origin == "nl" else "sql")
-        if lr.status != "miss" and s.origin == "nl" \
-                and tenant.policy.verify_time_window and lr.source_key is not None:
-            src = tenant.cache.entry(lr.source_key)
-            if src is not None and not verify_hit_time_window(s.sig, src.signature):
-                lr = LookupResult("miss", None)  # fail safe: treat as miss
         s.add_ms("lookup", (time.perf_counter() - t0) * 1e3)
-        s.provenance.append(f"lookup:{lr.status}")
-        if lr.status != "miss":
-            s.status = lr.status
-            s.table = lr.table
-            s.source_origin = lr.source_origin
-            s.source_snapshot = lr.source_snapshot
-            if lr.source_snapshot is not None:
-                # audit trail: which data snapshot the served table reflects
-                s.provenance.append(f"snapshot:{lr.source_snapshot}")
+        _apply_lookup(tenant, s, lr)
+
+
+def _apply_lookup(tenant: "Tenant", s: RequestState, lr: LookupResult) -> None:
+    if lr.status != "miss" and s.origin == "nl" \
+            and tenant.policy.verify_time_window and lr.source_key is not None:
+        src = tenant.cache.entry(lr.source_key)
+        if src is not None and not verify_hit_time_window(s.sig, src.signature):
+            # fail safe: treat as miss (no flight was registered for the
+            # original hit, so this executes directly in the plan stage)
+            lr = LookupResult("miss", None)
+    s.provenance.append(f"lookup:{lr.status}")
+    if lr.status != "miss":
+        s.status = lr.status
+        s.table = lr.table
+        s.source_origin = lr.source_origin
+        s.source_snapshot = lr.source_snapshot
+        if lr.source_snapshot is not None:
+            # audit trail: which data snapshot the served table reflects
+            s.provenance.append(f"snapshot:{lr.source_snapshot}")
 
 
 # ---------------------------------------------------- miss planner + execute
@@ -242,49 +297,63 @@ def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
 
 def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> None:
     """Group the batch's cache misses, dedup identical in-flight signatures,
-    and execute the unique ones through one ``execute_batch`` shared scan
+    and execute the unique ones through ``execute_batch`` shared scans
     (falling back to serial ``execute`` for singleton groups or plain
-    backends).  Bypass executions stay per-request — they are out-of-scope
-    by definition and carry no shareable signature."""
+    backends).  With a sharded cluster cache, miss leaders are partitioned by
+    shard and the per-shard groups execute *concurrently*; misses whose
+    signature is already in flight on another thread become followers and
+    wait for that flight instead of executing.  Bypass executions stay
+    per-request — they are out-of-scope by definition and carry no shareable
+    signature."""
+    followers: list[RequestState] = []
     misses: dict[str, list[RequestState]] = {}
     for s in states:
-        if s.pending:
-            t0 = time.perf_counter()
-            # sig.key() is interned: the lookup stage already computed it, so
-            # this (and the store stage's re-read) is a dict probe, not a
-            # second SHA-256 — the one-hash-per-request invariant is
-            # regression-tested via signature.key_hash_computations()
-            misses.setdefault(s.sig.key(), []).append(s)
-            s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
+        if not s.pending:
+            continue
+        if s.flight is not None and not s.flight_leader:
+            followers.append(s)
+            s.provenance.append("plan:coalesced")
+            continue
+        t0 = time.perf_counter()
+        # sig.key() is interned: the lookup stage already computed it, so
+        # this (and the store stage's re-read) is a dict probe, not a
+        # second SHA-256 — the one-hash-per-request invariant is
+        # regression-tested via signature.key_hash_computations()
+        misses.setdefault(s.sig.key(), []).append(s)
+        s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
 
     leaders = [group[0] for group in misses.values()]
     for group in misses.values():
         if len(group) > 1:
-            tenant.stats.deduped_misses += len(group) - 1
+            tenant.stats.bump(deduped_misses=len(group) - 1)
             for s in group[1:]:
                 s.deduped = True
                 s.provenance.append("plan:deduped")
 
-    if len(leaders) > 1 and hasattr(tenant.backend, "execute_batch"):
-        t0 = time.perf_counter()
-        tables = tenant.backend.execute_batch([s.sig for s in leaders])
-        batch_ms = (time.perf_counter() - t0) * 1e3
-        tenant.stats.backend_executions += len(leaders)
-        tenant.stats.batched_misses += len(leaders)
-        for s, table in zip(leaders, tables):
-            s.table = table
-            s.batched = True
-            # the scan is shared: each request is attributed the full batch
-            # wall time under 'execute' (not a per-request cost)
-            s.add_ms("execute", batch_ms)
-            s.provenance.append("execute:batched")
+    # shard-partitioned execution only pays when several shard groups can
+    # actually overlap; otherwise (one group, concurrency disabled, plain
+    # cache) the single cross-family execute_batch keeps the fused shared
+    # scan — one fact-table pass for the whole batch
+    shard_groups: Optional[list[list[RequestState]]] = None
+    shard_of = getattr(tenant.cache, "shard_index", None)
+    if len(leaders) > 1 and shard_of is not None \
+            and getattr(tenant.cache, "concurrent_misses", False) \
+            and hasattr(tenant.backend, "execute_batch"):
+        by_shard: dict[int, list[RequestState]] = {}
+        for s in leaders:
+            by_shard.setdefault(shard_of(s.sig), []).append(s)
+        if len(by_shard) > 1:
+            shard_groups = list(by_shard.values())
+    if shard_groups is not None:
+        _execute_shard_groups(tenant, shard_groups)
+    elif len(leaders) > 1 and hasattr(tenant.backend, "execute_batch"):
+        _execute_leader_group(tenant, leaders)
+        tenant.stats.bump(backend_executions=len(leaders),
+                          batched_misses=len(leaders))
     else:
         for s in leaders:
-            t0 = time.perf_counter()
-            s.table = tenant.backend.execute(s.sig)
-            s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
-            tenant.stats.backend_executions += 1
-            s.provenance.append("execute:single")
+            _execute_leader_group(tenant, [s])
+            tenant.stats.bump(backend_executions=1)
     for group in misses.values():
         for s in group:
             s.status = "miss"
@@ -292,39 +361,135 @@ def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> Non
                 s.table = group[0].table
                 s.batched = group[0].batched
 
+    # resolve this batch's flights so followers (here and on other threads)
+    # unblock; then serve our own followers.  Scanned over all states, not
+    # just group heads — a flight-owning state can sit at group[1:] when a
+    # flightless request with the same key (refresh, NL verify fail-safe)
+    # preceded it in the batch, and its flight must still complete.  The
+    # leader *stores before the flight deregisters*: once the flight is
+    # popped, a concurrent miss on this key starts a fresh computation unless
+    # the entry is already resident — and a later stage raising (a bypass
+    # execution, say) must not lose the only copy of a result followers
+    # adopted with store=False
+    complete = getattr(tenant.cache, "complete_flight", None)
+    if complete is not None:
+        for s in states:
+            if s.flight is not None and s.flight_leader and not s.flight.done:
+                if s.store and s.table is not None:
+                    _store_state(tenant, s)
+                complete(s.flight, s.table)
+    for s in followers:
+        _resolve_follower(tenant, s)
+
     # bypass executions (raw SQL or a validated-but-gated NL signature)
     for s in states:
         if s.status != "bypass" or s.bypass_exec is None:
             continue
         t0 = time.perf_counter()
-        if s.bypass_exec == "raw":
-            s.table = tenant.backend.execute_raw(s.req.sql)
-        else:
+        with tenant.gate.read:
+            if s.bypass_exec == "raw":
+                s.table = tenant.backend.execute_raw(s.req.sql)
+            else:
+                s.table = tenant.backend.execute(s.sig)
+        s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
+        tenant.stats.bump(backend_executions=1)
+        s.provenance.append(f"execute:bypass_{s.bypass_exec}")
+
+
+def _execute_leader_group(tenant: "Tenant", group: list[RequestState]) -> None:
+    """Execute one group of miss leaders: a shared ``execute_batch`` scan
+    when the group carries several intents, a single ``execute`` otherwise.
+    Counter bumps stay with the callers (concurrent callers must not bump
+    from pool threads mid-flight)."""
+    if len(group) > 1:
+        t0 = time.perf_counter()
+        with tenant.gate.read:
+            tables = tenant.backend.execute_batch([s.sig for s in group])
+        batch_ms = (time.perf_counter() - t0) * 1e3
+        for s, table in zip(group, tables):
+            s.table = table
+            s.batched = True
+            # the scan is shared: each request is attributed the full batch
+            # wall time under 'execute' (not a per-request cost)
+            s.add_ms("execute", batch_ms)
+            s.provenance.append("execute:batched")
+    else:
+        s = group[0]
+        t0 = time.perf_counter()
+        with tenant.gate.read:
             s.table = tenant.backend.execute(s.sig)
         s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
-        tenant.stats.backend_executions += 1
-        s.provenance.append(f"execute:bypass_{s.bypass_exec}")
+        s.provenance.append("execute:single")
+
+
+def _execute_shard_groups(tenant: "Tenant",
+                          groups: list[list[RequestState]]) -> None:
+    """Execute per-shard miss groups concurrently (the caller guarantees >= 2
+    groups and an opted-in cluster).  Safe because the OlapExecutor's plan
+    memos are idempotent, its counters are lock-guarded, and its kernels
+    release the GIL during numpy/JAX work, so shard groups overlap."""
+    with ThreadPoolExecutor(max_workers=len(groups),
+                            thread_name_prefix="shard-miss") as pool:
+        futures = [pool.submit(_execute_leader_group, tenant, g)
+                   for g in groups]
+        for f in futures:
+            f.result()  # propagate the first execution error
+    tenant.stats.bump(
+        backend_executions=sum(len(g) for g in groups),
+        batched_misses=sum(len(g) for g in groups if len(g) > 1))
+
+
+def _resolve_follower(tenant: "Tenant", s: RequestState) -> None:
+    """Wait for the flight owning this signature; on success adopt its table,
+    on leader failure/timeout execute directly — coalescing is opportunistic,
+    never load-bearing."""
+    timeout = getattr(tenant.cache, "flight_timeout", 30.0)
+    t0 = time.perf_counter()
+    ok = s.flight.wait(timeout)
+    s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
+    s.status = "miss"
+    s.deduped = True
+    if ok and s.flight.ok and s.flight.table is not None:
+        s.table = s.flight.table
+        # the leader's store is authoritative; a second identical put would
+        # only inflate store counters
+        s.store = False
+        tenant.stats.bump(coalesced_misses=1)
+        return
+    t0 = time.perf_counter()
+    with tenant.gate.read:
+        s.table = tenant.backend.execute(s.sig)
+    s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
+    tenant.stats.bump(backend_executions=1)
+    s.provenance.append("execute:flight_fallback")
 
 
 # -------------------------------------------------------------------- store
 
 
+def _store_state(tenant: "Tenant", s: RequestState) -> None:
+    t0 = time.perf_counter()
+    tenant.cache.put(s.sig, s.table,
+                     origin="nl" if s.origin == "nl" else "sql",
+                     snapshot_id=tenant.snapshot_id)
+    s.add_ms("store", (time.perf_counter() - t0) * 1e3)
+    s.stored = True
+    tenant.stats.bump(stores=1)
+    s.provenance.append("store")
+
+
 def _stage_store(tenant: "Tenant", states: list[RequestState]) -> None:
-    stored: set[str] = set()
+    # keys flight leaders already put at completion time count as stored:
+    # one put per key per batch
+    stored: set[str] = {s.sig.key() for s in states if s.stored}
     for s in states:
-        if s.status != "miss" or not s.store or s.table is None:
+        if s.status != "miss" or not s.store or s.table is None or s.stored:
             continue
         key = s.sig.key()
         if key in stored:
             continue
         stored.add(key)
-        t0 = time.perf_counter()
-        tenant.cache.put(s.sig, s.table,
-                         origin="nl" if s.origin == "nl" else "sql",
-                         snapshot_id=tenant.snapshot_id)
-        s.add_ms("store", (time.perf_counter() - t0) * 1e3)
-        tenant.stats.stores += 1
-        s.provenance.append("store")
+        _store_state(tenant, s)
 
 
 # ----------------------------------------------------------------- finalize
@@ -332,7 +497,7 @@ def _stage_store(tenant: "Tenant", states: list[RequestState]) -> None:
 
 def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
     if s.status == "bypass":
-        tenant.stats.bypasses += 1
+        tenant.stats.bump(bypasses=1)
     tenant.stats.record_stage_timings(s.timings)
     return QueryResult(
         status=s.status or "bypass",

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Optional, Sequence
 
+from ..cluster import CacheCluster
 from ..core.cache import SemanticCache
 from ..core.metrics import MetricLayer
 from ..core.nl_canon import NLCanonicalizer
@@ -30,7 +31,7 @@ from ..core.schema import StarSchema
 from ..core.sql_canon import SQLCanonicalizer
 from ..core.validator import SignatureValidator
 from .api import (DEFAULT_TENANT, Backend, QueryRequest, QueryResult,
-                  RefreshReport, TenantStats)
+                  ReadWriteGate, RefreshReport, TenantStats)
 from .pipeline import run_pipeline
 
 
@@ -58,7 +59,7 @@ class Tenant:
     name: str
     schema: StarSchema
     backend: Backend
-    cache: SemanticCache
+    cache: "SemanticCache | CacheCluster"
     nl: Optional[NLCanonicalizer]
     policy: SafetyPolicy
     metrics: Optional[MetricLayer]
@@ -66,6 +67,9 @@ class Tenant:
     sql_canon: SQLCanonicalizer
     validator: SignatureValidator
     stats: TenantStats
+    # read side held around backend executions; write side held while
+    # advance_snapshot mutates the dataset under concurrent request threads
+    gate: ReadWriteGate = dataclasses.field(default_factory=ReadWriteGate)
 
 
 class CacheService:
@@ -79,18 +83,36 @@ class CacheService:
         *,
         schema: StarSchema,
         backend: Backend,
-        cache: Optional[SemanticCache] = None,
+        cache: "Optional[SemanticCache | CacheCluster]" = None,
         nl: Optional[NLCanonicalizer] = None,
         policy: SafetyPolicy = SafetyPolicy(),
         metrics: Optional[MetricLayer] = None,
         snapshot_id: str = "snap0",
+        shards: Optional[int] = None,
     ) -> Tenant:
         """Register a tenant.  Tenants are isolated structurally (each has
         its own cache instance) and by key space (request ``scope`` is part
         of the signature hash), so one tenant can never serve another's
-        entries."""
+        entries.
+
+        ``shards=N`` serves the tenant from an N-shard
+        :class:`repro.cluster.CacheCluster` (family-partitioned locks,
+        single-flight miss dedup, concurrent per-shard miss execution).  A
+        plain ``cache=`` template passed alongside it contributes its
+        configuration (capacity, derivation flags, level mapper) to every
+        shard; ``shards=1`` is behavior-compatible with the unsharded path.
+        A pre-built ``CacheCluster`` may also be passed directly as
+        ``cache=``."""
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already registered")
+        if shards is not None:
+            if isinstance(cache, CacheCluster):
+                if cache.num_shards != shards:
+                    cache.set_shards(shards)
+            elif cache is not None:
+                cache = CacheCluster.from_template(cache, shards)
+            else:
+                cache = CacheCluster(schema, shards)
         t = Tenant(
             name=name, schema=schema, backend=backend,
             cache=cache if cache is not None else SemanticCache(schema),
@@ -208,6 +230,17 @@ class CacheService:
                 "advance_snapshot(delta=...) needs an OlapExecutor-style "
                 "backend exposing its Dataset as .ds and a partition-capable "
                 "execute_batch")
+        with t.gate.write:  # exclusive vs request-thread backend scans
+            return self._advance_with_delta(
+                t, rep, ds, delta, updated_start, updated_end,
+                refresh=refresh, recompute_fallbacks=recompute_fallbacks)
+
+    def _advance_with_delta(self, t, rep, ds, delta, updated_start,
+                            updated_end, *, refresh, recompute_fallbacks):
+        """Dataset-mutating half of :meth:`advance_snapshot`; runs under the
+        tenant's exclusive write gate so a concurrent request thread can
+        never scan half-appended columns or lose its executor plan memos
+        mid-execution."""
         part = ds.append_rows(delta, snapshot_id=t.snapshot_id)
         rep.appended_rows = part.num_rows
         # The delta's actual date extent is ground truth: union it with a
@@ -229,34 +262,46 @@ class CacheService:
                 t.cache.drop(key)
             rep.dropped = len(affected)
             return rep
-        mergeable, fallback = [], []
+        # snapshot the affected entries once: under the sharded cluster,
+        # concurrent request threads can evict (or a rebalance can migrate) a
+        # key between affected_keys() and this loop — a vanished entry simply
+        # no longer needs refreshing
+        mergeable, fallback = [], []  # lists of (key, entry)
         for k in affected:
-            (mergeable if refreshable(t.cache.entry(k).signature)
-             else fallback).append(k)
+            e = t.cache.entry(k)
+            if e is None:
+                continue
+            (mergeable if refreshable(e.signature) else fallback).append((k, e))
+
+        def try_refresh(key, table, merged):
+            try:
+                t.cache.refresh_entry(key, table, t.snapshot_id, merged=merged)
+                return 1
+            except KeyError:  # evicted while we were computing its table
+                return 0
+
         if mergeable:
-            sigs = [t.cache.entry(k).signature for k in mergeable]
+            sigs = [e.signature for _, e in mergeable]
             rows0 = getattr(t.backend, "rows_scanned", 0)
             deltas = t.backend.execute_batch(
                 sigs, partition=(part.start_row, part.end_row))
             rep.delta_rows_scanned = getattr(t.backend, "rows_scanned", 0) - rows0
-            t.stats.backend_executions += len(sigs)
-            for key, sig, dtab in zip(mergeable, sigs, deltas):
-                merged = merge_tables(sig, t.cache.entry(key).table, dtab)
-                t.cache.refresh_entry(key, merged, t.snapshot_id, merged=True)
-            rep.refreshed = len(mergeable)
+            t.stats.bump(backend_executions=len(sigs))
+            for (key, e), sig, dtab in zip(mergeable, sigs, deltas):
+                merged = merge_tables(sig, e.table, dtab)
+                rep.refreshed += try_refresh(key, merged, True)
         if fallback:
             if recompute_fallbacks:
-                sigs = [t.cache.entry(k).signature for k in fallback]
+                sigs = [e.signature for _, e in fallback]
                 rows0 = getattr(t.backend, "rows_scanned", 0)
                 tables = t.backend.execute_batch(sigs)
                 rep.recompute_rows_scanned = \
                     getattr(t.backend, "rows_scanned", 0) - rows0
-                t.stats.backend_executions += len(sigs)
-                for key, table in zip(fallback, tables):
-                    t.cache.refresh_entry(key, table, t.snapshot_id, merged=False)
-                rep.recomputed = len(fallback)
+                t.stats.bump(backend_executions=len(sigs))
+                for (key, _), table in zip(fallback, tables):
+                    rep.recomputed += try_refresh(key, table, False)
             else:
-                for key in fallback:
+                for key, _ in fallback:
                     t.cache.drop(key)
                 rep.dropped = len(fallback)
         return rep
@@ -285,5 +330,8 @@ class CacheService:
             if t.nl is not None and hasattr(t.nl, "memo_hits"):
                 d["frontend"]["nl_memo"] = {
                     "calls": t.nl.calls, "memo_hits": t.nl.memo_hits}
+            if hasattr(t.cache, "stats_by_shard"):
+                d["cluster"] = t.cache.describe()
+                d["cluster"]["by_shard"] = t.cache.stats_by_shard()
             return d
         return {name: self.stats(name) for name in self.tenants()}

@@ -1,0 +1,578 @@
+"""Sharded cache cluster: family-routing invariants, the shards=N vs
+unsharded differential oracle, single-flight miss dedup under real threads,
+deterministic rebalance migration (entries, LRU order, derivation-index
+membership), byte-aware accounting, and TenantStats thread safety."""
+import datetime as dt
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import CacheCluster, CacheShard, family_hash, family_key
+from repro.core import MemoizedNL, SemanticCache, SimulatedLLM
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.core.table import ResultTable
+from repro.olap.executor import OlapExecutor
+from repro.service import CacheService, QueryRequest
+
+JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+         "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+
+
+def sql_region(measures, where="", group="c_region"):
+    w = f"WHERE {where} " if where else ""
+    return (f"SELECT {group.split(',')[0].strip()}, {measures} "
+            f"FROM lineorder {JOINS}{w}GROUP BY {group}")
+
+
+@pytest.fixture()
+def canon(ssb_small):
+    return SQLCanonicalizer(ssb_small.schema)
+
+
+@pytest.fixture()
+def backend(ssb_small):
+    return OlapExecutor(ssb_small.dataset, impl="numpy")
+
+
+def mk_cluster(wl, shards, **kw):
+    return CacheCluster(wl.schema, shards,
+                        level_mapper=wl.dataset.level_mapper(), **kw)
+
+
+def mk_service(wl, shards=None, backend=None, **tenant_kw):
+    be = backend or OlapExecutor(wl.dataset, impl="numpy")
+    svc = CacheService()
+    svc.register_tenant(
+        "t", schema=wl.schema, backend=be,
+        cache=SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper()),
+        shards=shards, **tenant_kw)
+    return svc
+
+
+class CountingBackend:
+    """Backend wrapper counting executions, with an optional artificial stall
+    to widen race windows (single-flight tests)."""
+
+    def __init__(self, inner, stall_s=0.0, fail_first=False):
+        self.inner = inner
+        self.stall_s = stall_s
+        self.calls = 0
+        self._fail_first = fail_first
+        self._lock = threading.Lock()
+
+    def execute(self, sig):
+        with self._lock:
+            self.calls += 1
+            fail = self._fail_first
+            self._fail_first = False
+        if self.stall_s:
+            time.sleep(self.stall_s)
+        if fail:
+            raise RuntimeError("injected backend failure")
+        return self.inner.execute(sig)
+
+    def execute_raw(self, sql):
+        return self.inner.execute_raw(sql)
+
+
+# ------------------------------------------------------------------ routing
+
+
+class TestRouting:
+    def test_derivation_family_is_shard_local(self, ssb_small, canon):
+        """Roll-up/filter-down candidate pairs share (scope, schema, measure
+        multiset), so they must always land on the same shard — the invariant
+        that makes per-shard lookups equivalent to a global cache."""
+        cluster = mk_cluster(ssb_small, 4)
+        for scope in (None, "a", "b"):
+            for m in ("SUM(lo_revenue) AS r", "COUNT(*) AS n",
+                      "MIN(lo_supplycost) AS lo, SUM(lo_revenue) AS r"):
+                fine = canon.canonicalize(
+                    sql_region(m, "d_year = 1994", "c_region, c_nation"),
+                    scope=scope)
+                coarse = canon.canonicalize(
+                    sql_region(m, "d_year = 1994"), scope=scope)
+                narrowed = canon.canonicalize(
+                    sql_region(m, "d_year = 1994 AND c_region = 'ASIA'"),
+                    scope=scope)
+                assert family_key(fine) == family_key(coarse) == family_key(narrowed)
+                idx = cluster.shard_index(fine)
+                assert cluster.shard_index(coarse) == idx
+                assert cluster.shard_index(narrowed) == idx
+
+    def test_routing_is_deterministic_across_instances(self, ssb_small, canon):
+        """Routing hashes only canonical signature content, so a re-parsed
+        signature (fresh instance, fresh process semantics) routes
+        identically — a warmed/restored cluster keeps its layout."""
+        sql = sql_region("SUM(lo_revenue) AS r", "d_year = 1993")
+        a = canon.canonicalize(sql, scope="x")
+        b = SQLCanonicalizer(ssb_small.schema).canonicalize(sql, scope="x")
+        assert a is not b
+        assert family_hash(a) == family_hash(b)
+
+    def test_scopes_spread_over_shards(self, ssb_small, canon):
+        cluster = mk_cluster(ssb_small, 4)
+        idxs = {cluster.shard_index(
+            canon.canonicalize(sql_region("SUM(lo_revenue) AS r"),
+                               scope=f"s{i}")) for i in range(32)}
+        assert len(idxs) > 1  # 32 scopes cannot all collapse onto one shard
+
+    def test_register_tenant_shards_builds_cluster(self, ssb_small):
+        svc = mk_service(ssb_small, shards=4)
+        cache = svc.tenant("t").cache
+        assert isinstance(cache, CacheCluster)
+        assert cache.num_shards == 4
+        # the template's level_mapper reached every shard
+        assert all(s.cache.level_mapper is not None for s in cache.shards())
+
+
+# ------------------------------------------------- differential oracle
+
+
+class TestDifferentialOracle:
+    def _trace(self, wl, shards):
+        from benchmarks.bench_refresh import make_delta
+
+        be = OlapExecutor(wl.dataset, impl="numpy")
+        svc = CacheService()
+        svc.register_tenant(
+            "t", schema=wl.schema, backend=be,
+            cache=SemanticCache(wl.schema,
+                                level_mapper=wl.dataset.level_mapper()),
+            nl=MemoizedNL(SimulatedLLM(wl.vocab, model="oracle")),
+            shards=shards)
+        m = "SUM(lo_revenue) AS rev, COUNT(*) AS n"
+        sqls = [sql_region(m, f"d_year = {y}") for y in (1992, 1993)]
+        fine = sql_region(m, "d_year = 1994", "c_region, c_nation")
+        coarse = sql_region(m, "d_year = 1994")
+        out = []
+
+        def rec(results):
+            for r in results:
+                rows = None
+                if r.table is not None:
+                    rows = sorted(zip(*[map(str, r.table.columns[n])
+                                        for n in r.table.names]))
+                out.append((r.status, rows))
+
+        rec(svc.submit_batch([QueryRequest(sql=q, tenant="t")
+                              for q in sqls + [fine, sqls[0]]]))
+        rec(svc.submit_batch(
+            [QueryRequest(sql=coarse, tenant="t"),
+             QueryRequest(nl="total revenue by region", tenant="t",
+                          now=dt.date(1995, 6, 1))]))
+        rep = svc.advance_snapshot(
+            "t", "snap1",
+            delta=make_delta(wl.dataset, 60, np.random.default_rng(5)))
+        out.append(("refresh", rep.refreshed, rep.recomputed, rep.dropped,
+                    rep.unaffected))
+        rec(svc.submit_batch([QueryRequest(sql=q, tenant="t")
+                              for q in sqls + [coarse]]))
+        cs = svc.tenant("t").cache.stats
+        out.append(("stats", cs.hits_exact, cs.hits_rollup, cs.misses,
+                    cs.stores, cs.refreshes))
+        return out
+
+    def test_shards4_equals_shards1_and_plain(self):
+        """Identical hit/miss/derivation outcomes, identical tables, identical
+        cache counters for a mixed SQL/NL workload with derivations and a
+        snapshot advance — run on fresh datasets (the delta mutates them)."""
+        from repro.workloads import ssb
+
+        t_plain = self._trace(ssb.build(n_fact=4000, seed=0), None)
+        t_one = self._trace(ssb.build(n_fact=4000, seed=0), 1)
+        t_four = self._trace(ssb.build(n_fact=4000, seed=0), 4)
+        assert t_plain == t_one
+        assert t_plain == t_four
+
+
+# -------------------------------------------------------- single flight
+
+
+class TestSingleFlight:
+    def _storm(self, wl, backend, n_threads, sql):
+        svc = CacheService()
+        svc.register_tenant("t", schema=wl.schema, backend=backend, shards=4)
+        results = [None] * n_threads
+        errors = [None] * n_threads
+        barrier = threading.Barrier(n_threads)
+
+        def worker(i):
+            barrier.wait()
+            try:
+                results[i] = svc.submit(QueryRequest(sql=sql, tenant="t"))
+            except Exception as e:  # noqa: BLE001 — recorded for assertions
+                errors[i] = e
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return svc, results, errors
+
+    def test_cold_storm_executes_once(self, ssb_small):
+        """K threads issuing the same cold signature trigger exactly one
+        executor call; every thread receives the identical table."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.05)
+        svc, results, errors = self._storm(
+            ssb_small, be, 8, sql_region("SUM(lo_revenue) AS r"))
+        assert errors == [None] * 8
+        assert be.calls == 1
+        assert all(r.status == "miss" for r in results)
+        ref = results[0].table
+        for r in results[1:]:
+            assert r.table.equals(ref)
+        t = svc.tenant("t")
+        assert t.stats.coalesced_misses == 7
+        assert t.stats.backend_executions == 1
+        assert len(t.cache) == 1  # one store; followers never double-store
+        assert svc.submit(
+            QueryRequest(sql=sql_region("SUM(lo_revenue) AS r"),
+                         tenant="t")).status == "hit_exact"
+
+    def test_leader_failure_releases_followers(self, ssb_small):
+        """A crashed leader must not strand followers: the flight is failed,
+        waiters wake and execute the query themselves."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.05, fail_first=True)
+        svc, results, errors = self._storm(
+            ssb_small, be, 4, sql_region("COUNT(*) AS n"))
+        failed = [e for e in errors if e is not None]
+        served = [r for r in results if r is not None]
+        assert len(failed) == 1  # the leader propagates its backend error
+        assert len(served) == 3
+        assert all(r.status == "miss" and r.table is not None for r in served)
+
+    def test_flight_api_joins_and_completes(self, ssb_small, canon, backend):
+        cluster = mk_cluster(ssb_small, 2)
+        sig = canon.canonicalize(sql_region("SUM(lo_revenue) AS r"))
+        lr, flight, leader = cluster.lookup_or_flight(sig)
+        assert lr.status == "miss" and leader and not flight.done
+        lr2, flight2, leader2 = cluster.lookup_or_flight(sig)
+        assert flight2 is flight and not leader2  # joined, not re-registered
+        assert cluster.inflight() == 1
+        table = backend.execute(sig)
+        cluster.complete_flight(flight, table)
+        assert flight.ok and flight.table is table
+        assert cluster.inflight() == 0
+        # a new miss after completion starts a fresh flight
+        sig_b = canon.canonicalize(sql_region("COUNT(*) AS n"))
+        _, fb, lb = cluster.lookup_or_flight(sig_b)
+        assert lb and fb is not flight
+        cluster.fail_flight(fb, RuntimeError("abandoned"))
+        assert fb.done and not fb.ok
+
+    def test_flight_completes_when_flightless_request_shares_key(self, ssb_small):
+        """Regression: a refresh=True request (skips lookup, carries no
+        flight) batched before a normal request with the same signature used
+        to leave the normal request's flight at group[1:], where it was never
+        completed — cross-thread followers then fell back and re-executed.
+        The flight must complete and followers must coalesce."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.2)
+        svc = CacheService()
+        svc.register_tenant("t", schema=ssb_small.schema, backend=be, shards=4)
+        sql = sql_region("SUM(lo_revenue) AS r")
+        follower_result = []
+
+        def leader_batch():
+            follower_result.append(svc.submit_batch([
+                QueryRequest(sql=sql, tenant="t", refresh=True),
+                QueryRequest(sql=sql, tenant="t"),
+            ]))
+
+        def follower():
+            time.sleep(0.05)  # join while the leader batch is stalled
+            follower_result.append(svc.submit(QueryRequest(sql=sql, tenant="t")))
+
+        ts = [threading.Thread(target=leader_batch),
+              threading.Thread(target=follower)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert be.calls == 1  # the follower coalesced instead of re-executing
+        assert svc.tenant("t").stats.coalesced_misses == 1
+        assert svc.tenant("t").cache.inflight() == 0
+
+    def test_single_flight_disabled(self, ssb_small, canon):
+        cluster = mk_cluster(ssb_small, 2, single_flight=False)
+        sig = canon.canonicalize(sql_region("SUM(lo_revenue) AS r"))
+        lr, flight, leader = cluster.lookup_or_flight(sig)
+        assert lr.status == "miss" and flight is None and not leader
+
+
+# ------------------------------------------------------------- rebalance
+
+
+class TestRebalance:
+    def _fill(self, cluster, canon, backend, years=(1992, 1993, 1994, 1995)):
+        sigs = []
+        for scope in ("a", "b", "c"):
+            for m in ("SUM(lo_revenue) AS r", "COUNT(*) AS n"):
+                for y in years:
+                    sigs.append(canon.canonicalize(
+                        sql_region(m, f"d_year = {y}"), scope=scope))
+        for s in sigs:
+            cluster.put(s, backend.execute(s))
+        return sigs
+
+    def test_add_remove_preserves_entries_and_hits(self, ssb_small, canon,
+                                                   backend):
+        cluster = mk_cluster(ssb_small, 2)
+        sigs = self._fill(cluster, canon, backend)
+        tables = {s.key(): cluster.entry(s.key()).table for s in sigs}
+        before_keys = sorted(cluster.keys())
+        stores_before = cluster.stats.stores
+
+        assert cluster.add_shard() == 3
+        assert sorted(cluster.keys()) == before_keys
+        for s in sigs:
+            lr = cluster.lookup(s)
+            assert lr.status == "hit_exact"
+            assert lr.table is tables[s.key()]  # the same object migrated
+
+        assert cluster.remove_shard() == 2
+        assert cluster.remove_shard() == 1
+        assert sorted(cluster.keys()) == before_keys
+        for s in sigs:
+            assert cluster.lookup(s).status == "hit_exact"
+        # counters never go backwards across topology changes
+        assert cluster.stats.stores == stores_before
+        assert cluster.stats.bytes_cached == cluster.total_bytes()
+        with pytest.raises(ValueError):
+            cluster.remove_shard()
+
+    def test_derivations_survive_migration(self, ssb_small, canon, backend):
+        cluster = mk_cluster(ssb_small, 1)
+        fine = canon.canonicalize(
+            sql_region("SUM(lo_revenue) AS r", "d_year = 1994",
+                       "c_region, c_nation"))
+        cluster.put(fine, backend.execute(fine))
+        coarse = canon.canonicalize(sql_region("SUM(lo_revenue) AS r",
+                                               "d_year = 1994"))
+        assert cluster.lookup(coarse).status == "hit_rollup"
+        for n in (2, 5, 3, 1):
+            cluster.set_shards(n)
+            assert cluster.lookup(coarse).status == "hit_rollup"
+
+    def test_migrated_entry_leaves_no_stale_index(self, ssb_small, canon,
+                                                  backend):
+        """Tier-2 index membership is fully cleaned up by migration: the
+        source shard retains no trace, and dropping the entry on its new home
+        shard makes derivation probes miss everywhere."""
+        cluster = mk_cluster(ssb_small, 2)
+        fine = canon.canonicalize(
+            sql_region("SUM(lo_revenue) AS r", "d_year = 1994",
+                       "c_region, c_nation"))
+        key = cluster.put(fine, backend.execute(fine))
+        old_home = cluster.shard_for(fine)
+        # grow until the family re-routes to a different shard index
+        for n in (3, 4, 5, 6, 7):
+            cluster.set_shards(n)
+            if cluster.shard_index(fine) != old_home.index:
+                break
+        else:
+            pytest.fail("family never re-routed while growing to 7 shards")
+        new_home = cluster.shard_for(fine)
+        assert new_home is not old_home
+        for shard in cluster.shards():
+            if shard is new_home:
+                continue
+            assert not shard.contains(key)
+            assert key not in shard.cache._index_of
+            assert key not in shard.cache._seq_of
+            assert all(key not in b.order
+                       for b in shard.cache._by_measures.values())
+        coarse = canon.canonicalize(sql_region("SUM(lo_revenue) AS r",
+                                               "d_year = 1994"))
+        assert cluster.lookup(coarse).status == "hit_rollup"
+        assert cluster.drop(key)
+        assert cluster.lookup(coarse).status == "miss"
+        assert cluster.entry(key) is None
+
+    def test_evicted_entry_never_serves_derivation(self, ssb_small, canon,
+                                                   backend):
+        """Eviction regression (unsharded core path): once the LRU pushes a
+        roll-up source out, derivation probes must miss — no ghost candidates
+        in any index tier."""
+        cache = SemanticCache(ssb_small.schema, capacity=1,
+                              level_mapper=ssb_small.dataset.level_mapper())
+        fine = canon.canonicalize(
+            sql_region("SUM(lo_revenue) AS r", "d_year = 1994",
+                       "c_region, c_nation"))
+        key = cache.put(fine, backend.execute(fine))
+        coarse = canon.canonicalize(sql_region("SUM(lo_revenue) AS r",
+                                               "d_year = 1994"))
+        assert cache.lookup(coarse).status == "hit_rollup"
+        other = canon.canonicalize(sql_region("COUNT(*) AS n"))
+        cache.put(other, backend.execute(other))  # capacity=1: evicts `fine`
+        assert cache.stats.evictions == 1
+        assert cache.lookup(coarse).status == "miss"
+        assert key not in cache._index_of and key not in cache._seq_of
+        assert all(key not in b.order for b in cache._by_measures.values())
+
+    def test_lru_order_survives_rebalance(self, ssb_small, canon, backend):
+        """Recency is carried by global stamps: after shrinking to one shard,
+        evictions hit the *least recently touched* entry across the whole
+        pre-migration population, not an artifact of migration order."""
+        cluster = mk_cluster(ssb_small, 3)
+        sigs = self._fill(cluster, canon, backend, years=(1992, 1993))
+        victim, kept = sigs[0], sigs[1:]
+        for s in kept:  # touch everything except the victim
+            assert cluster.lookup(s).status == "hit_exact"
+        cluster.set_shards(1)
+        shard = cluster.shards()[0]
+        shard.cache.capacity = len(sigs) - 1
+        shard.cache._enforce_capacity()
+        assert cluster.entry(victim.key()) is None
+        assert all(cluster.entry(s.key()) is not None for s in kept)
+
+
+# ------------------------------------------------------- byte accounting
+
+
+def _table(n_rows, n_cols=1):
+    return ResultTable({f"c{i}": np.arange(n_rows, dtype=np.float64)
+                        for i in range(n_cols)})
+
+
+class TestByteAccounting:
+    def _sigs(self, canon, n):
+        return [canon.canonicalize(sql_region("SUM(lo_revenue) AS r",
+                                              f"d_year = {1992 + i}"))
+                for i in range(n)]
+
+    def test_capacity_bytes_evicts_lru(self, ssb_small, canon):
+        cache = SemanticCache(ssb_small.schema, capacity_bytes=3000)
+        sigs = self._sigs(canon, 4)
+        for s in sigs[:3]:
+            cache.put(s, _table(125))  # 1000 bytes each
+        assert len(cache) == 3
+        assert cache.stats.bytes_cached == 3000 == cache.total_bytes()
+        assert cache.stats.bytes_evicted == 0
+        cache.put(sigs[3], _table(125))  # over budget: LRU out
+        assert len(cache) == 3
+        assert cache.entry(sigs[0].key()) is None
+        assert cache.stats.bytes_cached == 3000
+        assert cache.stats.bytes_evicted == 1000
+        assert cache.stats.evictions == 1
+
+    def test_entry_count_and_bytes_budgets_compose(self, ssb_small, canon):
+        cache = SemanticCache(ssb_small.schema, capacity=10,
+                              capacity_bytes=2000)
+        for s in self._sigs(canon, 4):
+            cache.put(s, _table(125))
+        assert len(cache) == 2  # bytes budget binds before the entry budget
+
+    def test_overwrite_and_refresh_track_bytes(self, ssb_small, canon):
+        cache = SemanticCache(ssb_small.schema)
+        (sig,) = self._sigs(canon, 1)
+        key = cache.put(sig, _table(100))
+        assert cache.stats.bytes_cached == 800
+        cache.put(sig, _table(200))  # overwrite with a bigger table
+        assert cache.stats.bytes_cached == 1600
+        cache.refresh_entry(key, _table(50), "snap1")
+        assert cache.stats.bytes_cached == 400
+        assert cache.entry(key).table_nbytes == 400
+        cache.drop(key)
+        assert cache.stats.bytes_cached == 0
+
+    def test_refresh_growth_enforces_byte_budget(self, ssb_small, canon):
+        """Regression: delta merges grow cached tables in place, and the
+        growth must evict LRU just like a put would."""
+        cache = SemanticCache(ssb_small.schema, capacity_bytes=2000)
+        sigs = self._sigs(canon, 2)
+        keys = [cache.put(s, _table(100)) for s in sigs]  # 800 bytes each
+        cache.refresh_entry(keys[1], _table(200), "snap1")  # grows to 1600
+        assert cache.stats.bytes_cached <= 2000
+        assert cache.entry(keys[0]) is None  # LRU evicted to make room
+        assert cache.stats.evictions == 1
+
+    def test_cluster_splits_byte_budget(self, ssb_small):
+        cluster = CacheCluster(ssb_small.schema, shards=4,
+                               capacity_bytes=4000)
+        assert all(s.cache.capacity_bytes == 1000 for s in cluster.shards())
+        one = CacheCluster(ssb_small.schema, shards=1, capacity_bytes=4000)
+        assert one.shards()[0].cache.capacity_bytes == 4000
+
+    def test_stats_surface_bytes(self, ssb_small, canon):
+        svc = mk_service(ssb_small, shards=2)
+        svc.submit(QueryRequest(sql=sql_region("SUM(lo_revenue) AS r"),
+                                tenant="t"))
+        d = svc.stats("t")
+        assert d["cache"]["bytes_cached"] > 0
+        assert d["cache"]["bytes_evicted"] == 0
+        assert d["cluster"]["shards"] == 2
+        assert len(d["cluster"]["by_shard"]) == 2
+        json.dumps(d)  # the whole stats payload stays serializable
+
+
+# --------------------------------------------------- TenantStats threading
+
+
+class TestTenantStatsConcurrency:
+    def test_concurrent_bumps_and_reservoirs_are_exact(self):
+        from repro.service import TenantStats
+
+        stats = TenantStats()
+        n_threads, n_iter = 8, 2000
+
+        def worker(tid):
+            for i in range(n_iter):
+                stats.bump(requests=1, stores=1, backend_executions=2)
+                stats.record_stage_timings({"lookup": float(i % 7),
+                                            "execute": 1.0})
+                if i % 256 == 0:
+                    stats.stage_percentiles()  # concurrent reader
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert stats.requests == n_threads * n_iter
+        assert stats.stores == n_threads * n_iter
+        assert stats.backend_executions == 2 * n_threads * n_iter
+        pct = stats.stage_percentiles()
+        assert set(pct) == {"lookup", "execute"}
+        json.dumps(stats.to_dict())
+
+    def test_concurrent_service_traffic_counts_consistently(self, ssb_small):
+        """8 threads of mixed hit/miss traffic through one sharded tenant:
+        every response is well-formed and the request counter is exact."""
+        svc = mk_service(ssb_small, shards=4)
+        sqls = [sql_region("SUM(lo_revenue) AS r", f"d_year = {y}")
+                for y in (1992, 1993, 1994, 1995)]
+        n_threads, per_thread = 8, 12
+        errors = []
+
+        def worker(tid):
+            try:
+                for i in range(per_thread):
+                    r = svc.submit(QueryRequest(
+                        sql=sqls[(tid + i) % len(sqls)], tenant="t"))
+                    assert r.status in ("miss", "hit_exact")
+                    assert r.table is not None
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        t = svc.tenant("t")
+        assert t.stats.requests == n_threads * per_thread
+        # every request was served: hits + misses + coalesced add up
+        cs = t.cache.stats
+        assert cs.lookups + t.stats.coalesced_misses >= n_threads * per_thread
