@@ -31,6 +31,8 @@ merge must work on the oracle path without importing JAX.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
 from .derivations import _group_inverse, _reaggregate
@@ -55,35 +57,57 @@ def merge_tables(sig: Signature, base: ResultTable, delta: ResultTable) -> Resul
     (``_group_inverse``); appended rows can only add groups, never empty
     existing ones, so the union is the full recompute's group space.
     """
+    return merge_partials(sig, (base, delta))
+
+
+def merge_partials(sig: Signature, tables: Sequence[ResultTable]) -> ResultTable:
+    """K-way generalization of :func:`merge_tables`: merge the signature's
+    aggregates over any number of disjoint row partitions in one pass.
+
+    This is the partition-parallel scan plane's combiner: each table is the
+    fused scan of one fact partition (or streaming chunk), and one composite
+    factorization over the concatenated key columns unions the group spaces.
+    Because ``_group_inverse`` canonicalizes groups by *sorted value order* —
+    independent of which partition contributed them or in what order the
+    partials arrive — the merged table is invariant under permutation of
+    ``tables``, and its row order matches the unpartitioned fused scan (whose
+    dense group ids are also sorted-unique order).
+    """
     if not refreshable(sig):
         raise ValueError(
             f"signature is not mergeable (non-composable measures or "
             f"post-aggregation): {sig.canonical_json()}")
-    if delta.num_rows == 0 and sig.levels:
-        return base  # the delta matched no rows of any group
-    if base.num_rows == 0 and sig.levels:
-        return delta
+    if not tables:
+        raise ValueError("merge_partials requires at least one partial table")
+    if len(tables) == 1:
+        return tables[0]
     if not sig.levels:
-        # global aggregate: one row on both sides, combine directly
+        # global aggregate: one row per partial, combine directly
         cols = {}
         for i, m in enumerate(sig.measures):
-            a = np.asarray(base.columns[f"m{i}"], np.float64)
-            b = np.asarray(delta.columns[f"m{i}"], np.float64)
-            cols[f"m{i}"] = _combine(m.agg, a, b)
+            acc = np.asarray(tables[0].columns[f"m{i}"], np.float64)
+            for t in tables[1:]:
+                acc = _combine(m.agg, acc,
+                               np.asarray(t.columns[f"m{i}"], np.float64))
+            cols[f"m{i}"] = acc
         return ResultTable(cols)
+    # partitions that matched no rows contribute no groups
+    live = [t for t in tables if t.num_rows > 0]
+    if not live:
+        return tables[0]
+    if len(live) == 1:
+        return live[0]
     key_cols = [
-        np.concatenate([np.asarray(base.columns[lv]),
-                        np.asarray(delta.columns[lv])])
+        np.concatenate([np.asarray(t.columns[lv]) for t in live])
         for lv in sig.levels
     ]
-    n = base.num_rows + delta.num_rows
+    n = sum(t.num_rows for t in live)
     inverse, uniques = _group_inverse(key_cols, n)
     n_groups = len(uniques[0])
     out: dict[str, np.ndarray] = {lv: u for lv, u in zip(sig.levels, uniques)}
     for i, m in enumerate(sig.measures):
         vals = np.concatenate([
-            np.asarray(base.columns[f"m{i}"], np.float64),
-            np.asarray(delta.columns[f"m{i}"], np.float64)])
+            np.asarray(t.columns[f"m{i}"], np.float64) for t in live])
         # partition values re-aggregate exactly like roll-up child groups:
         # SUM/COUNT add, MIN/MAX combine NaN-aware
         out[f"m{i}"] = _reaggregate(m.agg, vals, inverse, n_groups)

@@ -351,6 +351,11 @@ class DeviceDataset:
         self._time = _time
         self.ds = dataset
         self._store: dict = {}
+        # dimension-column uploads live in their own store so it can be
+        # *aliased* between mirrors (see ``share_dim_arrays``): every
+        # partition/chunk sub-executor of the scan plane then shares one
+        # live dim upload instead of each copying a point-in-time snapshot
+        self._dim_store: dict = {}
         self.upload_ms = 0.0
         self._timing_depth = 0
 
@@ -358,11 +363,18 @@ class DeviceDataset:
     def num_rows(self) -> int:
         return self.ds.fact.num_rows
 
+    def _map(self, key) -> dict:
+        return self._dim_store if key and key[0] == "dimcol" else self._store
+
     def cache(self, key, build):
         """Memoized device array: ``build()`` may return a host numpy array
         (uploaded) or a jnp array (kept as-is).  Keys are caller-namespaced
-        tuples, e.g. ``('aligned', 'customer.c_region')``."""
-        v = self._store.get(key)
+        tuples, e.g. ``('aligned', 'customer.c_region')``.  Concurrent
+        builders (scan-plane partition threads, the streaming stager) may
+        race on a cold key; both build the same value, last write wins —
+        benign for pure uploads."""
+        store = self._map(key)
+        v = store.get(key)
         if v is None:
             # only the outermost frame accrues upload_ms: builders call
             # cache() recursively (aligned -> col/dimcol) and the inner
@@ -376,8 +388,12 @@ class DeviceDataset:
                 self._timing_depth -= 1
             if self._timing_depth == 0:
                 self.upload_ms += (self._time.perf_counter() - t0) * 1e3
-            self._store[key] = v
+            store[key] = v
         return v
+
+    def drop(self, key) -> None:
+        """Release one memoized device array (executor memo-LRU eviction)."""
+        self._map(key).pop(key, None)
 
     def fact_aligned(self, qualified: str):
         """Device array of ``table.column`` aligned to fact rows; dimension
@@ -411,21 +427,25 @@ class DeviceDataset:
         after a fact append), keeping only the dimension-column uploads —
         dimension tables are immutable, so the next scan re-uploads fact
         data only."""
-        self._store = {k: v for k, v in self._store.items()
-                       if k[0] == "dimcol"}
+        self._store.clear()
 
     def share_dim_arrays(self, other: "DeviceDataset") -> None:
-        """Seed this mirror with another mirror's dimension-column uploads.
+        """Alias this mirror's dimension-column store to another mirror's.
         Valid whenever both datasets share the same dimension tables (row
         slices do): ``('dimcol', ...)`` entries are aligned to dimension
-        rows, never to fact rows, so a delta-slice mirror reuses them as-is
-        and only uploads its own (delta-sized) fact columns."""
+        rows, never to fact rows, so a delta-slice or partition mirror
+        reuses them as-is and only uploads its own (slice-sized) fact
+        columns.  The stores are *live-shared* after the call: a dim upload
+        by either mirror is visible to both (and to every other mirror
+        aliased to the same store)."""
         if other.ds.dims is not self.ds.dims:
             raise ValueError("device dim arrays can only be shared between "
                              "mirrors of the same dimension tables")
-        for key, v in other._store.items():
-            if key[0] == "dimcol":
-                self._store.setdefault(key, v)
+        for key, v in self._dim_store.items():
+            other._dim_store.setdefault(key, v)
+        self._dim_store = other._dim_store
 
     def nbytes(self) -> int:
-        return int(sum(getattr(v, "nbytes", 0) for v in self._store.values()))
+        return int(sum(getattr(v, "nbytes", 0) for v in self._store.values())
+                   + sum(getattr(v, "nbytes", 0)
+                         for v in self._dim_store.values()))

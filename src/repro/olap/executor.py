@@ -25,27 +25,99 @@ path (one seg_agg launch per measure, host-side numpy masks/expressions) as
 the benchmark baseline.  Post-aggregation (HAVING/ORDER BY/LIMIT), group
 decoding, and COUNT DISTINCT remain host-side — they touch only the small
 aggregate, never the fact table.
+
+* **Scan plane** — ``OlapExecutor(partitions=N, max_device_rows=...)``
+  activates the partition-parallel miss path: the fact table is split into
+  contiguous row-range partitions (``scan_plane.plan_scan``), each scanned by
+  a per-partition sub-executor on a thread pool (pinned to distinct JAX
+  devices when the host exposes several), and the partial tables are merged
+  with the refresh merge algebra (``core.refresh.merge_partials``) —
+  SUM/COUNT add, NaN-aware MIN/MAX, AVG finalized from merged SUM/COUNT.
+  ``max_device_rows`` adds streaming: partitions larger than the budget are
+  scanned as a sequence of pow2-sized chunks with the next chunk's columns
+  staged while the current one scans.  ``partitions=1`` (the default) is the
+  unpartitioned oracle the merged tables are differential-tested against.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading as _threading
-from typing import Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from ..core import sqlparse as sp
+from ..core.refresh import merge_partials
 from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError, SQLCanonicalizer
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
 from ..core.table import ResultTable
 from ..kernels.seg_agg.ops import (seg_agg, seg_agg_batch_blocks,
                                    seg_agg_fused, seg_agg_masked)
+from . import scan_plane
 from .columnar import Dataset, date_to_days
 
 MAX_DENSE_GROUPS = 1 << 20  # dense group-space cap for the segment-reduce path
 
+DEFAULT_MEMO_CAP = 64  # per-executor LRU bound on plan/index memo dicts
+
 _NEVER = (np.inf, -np.inf)  # pad range that matches nothing
+
+_UNSET = object()
+
+
+class _LRU:
+    """Bounded memo dict: get/set bump recency, inserts past ``cap`` evict
+    the least-recently-used entry through ``on_evict`` (which drops the
+    entry's device-store arrays, so a long-lived multi-tenant executor's
+    device footprint is bounded along with the host dicts).  A small lock
+    keeps the recency list coherent under the scan plane's partition
+    threads."""
+
+    def __init__(self, cap: int,
+                 on_evict: Optional[Callable[[object, object], None]] = None):
+        self.cap = int(cap)
+        self._d: collections.OrderedDict = collections.OrderedDict()
+        self._on_evict = on_evict
+        self._lock = _threading.Lock()
+
+    def get(self, key, default=None):
+        with self._lock:
+            if key not in self._d:
+                return default
+            self._d.move_to_end(key)
+            return self._d[key]
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._d
+
+    def __getitem__(self, key):
+        with self._lock:
+            v = self._d[key]
+            self._d.move_to_end(key)
+            return v
+
+    def __setitem__(self, key, value) -> None:
+        evicted = []
+        with self._lock:
+            self._d[key] = value
+            self._d.move_to_end(key)
+            while len(self._d) > self.cap:
+                evicted.append(self._d.popitem(last=False))
+        if self._on_evict is not None:
+            for k, v in evicted:  # outside the lock: callbacks touch stores
+                self._on_evict(k, v)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._d)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
 
 
 @dataclasses.dataclass
@@ -70,26 +142,45 @@ class _MeasurePlan:
     sum_block: object
     minmax_block: Optional[object]
     out_spec: list[tuple]
+    # device-store keys of the blocks, so LRU eviction of the plan can also
+    # release the device arrays it pinned
+    sum_key: Optional[tuple] = None
+    mm_key: Optional[tuple] = None
 
 
 class OlapExecutor:
-    def __init__(self, dataset: Dataset, impl: str = "auto", fused: bool = True):
+    def __init__(self, dataset: Dataset, impl: str = "auto", fused: bool = True,
+                 partitions: int = 1, max_device_rows: Optional[int] = None,
+                 memo_cap: int = DEFAULT_MEMO_CAP):
         """impl: 'auto' (seg_agg kernel dispatch), 'numpy' (independent
         oracle), or any explicit seg_agg impl ('xla' | 'interpret' |
         'pallas').  ``fused=False`` keeps the legacy per-measure host path
-        (the pre-device-resident baseline) for JAX impls."""
+        (the pre-device-resident baseline) for JAX impls.
+
+        ``partitions=N`` activates the partition-parallel scan plane (N
+        concurrent row-range scans merged with the refresh algebra);
+        ``max_device_rows`` bounds per-scan device residency and turns
+        larger partitions into streamed chunk sequences.  ``memo_cap``
+        bounds every plan/index memo dict (LRU)."""
         if impl not in ("auto", "numpy", "xla", "interpret", "pallas"):
             raise ValueError(
                 f"unknown impl {impl!r}: expected 'auto', 'numpy', 'xla', "
                 "'interpret', or 'pallas'")
+        if partitions < 1:
+            raise ValueError(f"partitions must be >= 1, got {partitions}")
+        if memo_cap < 1:
+            raise ValueError(f"memo_cap must be >= 1, got {memo_cap}")
         self.ds = dataset
         self.impl = impl
         self.fused = bool(fused) and impl != "numpy"
+        self.partitions = int(partitions)
+        self.max_device_rows = max_device_rows
+        self._memo_cap = int(memo_cap)
         self._canon = SQLCanonicalizer(dataset.schema)
-        self._level_cache: dict[str, _LevelPlan] = {}
-        self._gids_cache: dict[tuple, tuple] = {}
-        self._rect_cache: dict[tuple, object] = {}
-        self._mplans: dict[tuple, _MeasurePlan] = {}
+        self._level_cache: _LRU = _LRU(memo_cap)
+        self._gids_cache: _LRU = _LRU(memo_cap, self._evict_gids)
+        self._rect_cache: _LRU = _LRU(memo_cap, self._evict_rect)
+        self._mplans: _LRU = _LRU(memo_cap, self._evict_mplan)
         self._exact_cols: dict[str, bool] = {}
         self._nan_cols: dict[str, bool] = {}
         self._ds_version = getattr(dataset, "version", 0)
@@ -97,9 +188,22 @@ class OlapExecutor:
         self.rows_scanned = 0
         self.batch_calls = 0  # execute_batch invocations (service miss planner)
         self.batch_groups = 0  # shared-scan groups actually fused across those
+        self.partitioned_scans = 0  # scan-plane invocations
+        self.partition_fallbacks = 0  # sigs routed to single-partition scan
+        self.streaming_chunks = 0  # chunk scans beyond the first per partition
         # the cluster miss planner runs shard groups on concurrent threads;
         # bare '+=' on shared counters would drop increments
         self._count_lock = _threading.Lock()
+        # serializes scans on this executor when it acts as a resident
+        # per-partition sub (keeps counter deltas attributable per scan)
+        self._scan_mutex = _threading.Lock()
+        self._subs_lock = _threading.Lock()
+        self._subs: dict[tuple[int, int], "OlapExecutor"] = {}
+        self._dim_pools: dict = {}  # device -> shared dimcol store dict
+        self._pool_obj: Optional[ThreadPoolExecutor] = None
+        self._plan_cache: Optional[scan_plane.ScanPlan] = None
+        self._pstats: list[dict] = []
+        self._devices = _UNSET
 
     def _count(self, executions: int = 0, rows_scanned: int = 0,
                batch_calls: int = 0, batch_groups: int = 0) -> None:
@@ -108,6 +212,55 @@ class OlapExecutor:
             self.rows_scanned += rows_scanned
             self.batch_calls += batch_calls
             self.batch_groups += batch_groups
+
+    # ------------------------------------------------------- memo LRU bounds
+    def _dev_drop(self, *keys) -> None:
+        dev = self.ds._device
+        if dev is None:
+            return
+        for k in keys:
+            if k is not None:
+                dev.drop(k)
+
+    def _evict_gids(self, key, value) -> None:
+        self._dev_drop(("gids", key))
+
+    def _evict_rect(self, key, value) -> None:
+        self._dev_drop(key)  # the memo key IS the device key ('rectidx', lvls)
+
+    def _evict_mplan(self, key, plan) -> None:
+        self._dev_drop(plan.sum_key, plan.mm_key)
+
+    def memo_sizes(self) -> dict[str, int]:
+        """Current entry counts of every per-executor memo (all LRU-bounded
+        by ``memo_cap`` except the per-column predicate probes, which are
+        naturally bounded by the schema's column count)."""
+        return {
+            "level_plans": len(self._level_cache),
+            "gids": len(self._gids_cache),
+            "rect_index": len(self._rect_cache),
+            "measure_plans": len(self._mplans),
+            "pred_exact_cols": len(self._exact_cols),
+            "pred_nan_cols": len(self._nan_cols),
+        }
+
+    def stats(self) -> dict:
+        """Executor counters: totals, memo sizes, and — when the scan plane
+        is active — per-partition rows/executions/chunk accounting."""
+        with self._count_lock:
+            return {
+                "executions": self.executions,
+                "rows_scanned": self.rows_scanned,
+                "batch_calls": self.batch_calls,
+                "batch_groups": self.batch_groups,
+                "partitions": self.partitions,
+                "max_device_rows": self.max_device_rows,
+                "partitioned_scans": self.partitioned_scans,
+                "partition_fallbacks": self.partition_fallbacks,
+                "streaming_chunks": self.streaming_chunks,
+                "memo_sizes": self.memo_sizes(),
+                "per_partition": [dict(p) for p in self._pstats],
+            }
 
     @property
     def dev(self):
@@ -127,11 +280,24 @@ class OlapExecutor:
             self._mplans.clear()
             self._exact_cols.clear()
             self._nan_cols.clear()
+            with self._subs_lock:
+                # partition layout and row slices are stale; dim pools
+                # survive (dimension tables are immutable across appends)
+                self._subs.clear()
+                self._plan_cache = None
+            with self._count_lock:
+                self._pstats = []
             self._ds_version = v
 
     # ------------------------------------------------------------------ api
     def execute(self, sig: Signature) -> ResultTable:
         self._sync()
+        if self._scan_active():
+            if scan_plane.partition_compatible(sig):
+                self._count(executions=1)
+                return self._execute_partitioned([sig])[0]
+            with self._count_lock:
+                self.partition_fallbacks += 1
         self._count(executions=1, rows_scanned=self.ds.fact.num_rows)
         if self.fused:
             return self._execute_fused(sig)
@@ -173,6 +339,8 @@ class OlapExecutor:
                         batch_calls=sub.batch_calls,
                         batch_groups=sub.batch_groups)
             return out
+        if self._scan_active():
+            return self._execute_batch_partitioned(sigs)
         self._count(batch_calls=1)
         out: list[Optional[ResultTable]] = [None] * len(sigs)
         if not self.fused:
@@ -231,6 +399,249 @@ class OlapExecutor:
         if self.fused and self.ds._device is not None:
             sub.ds.device().share_dim_arrays(self.ds._device)
         return sub
+
+    # ------------------------------------------------ partition-parallel scan
+    def _scan_active(self) -> bool:
+        """True when the scan plane handles full-table scans: multiple
+        partitions requested, or the table exceeds the per-scan device-row
+        budget (streaming).  Sub-executors are built with ``partitions=1``
+        and no budget, so they never re-enter this path."""
+        n = self.ds.fact.num_rows
+        if n <= 0:
+            return False
+        if self.partitions > 1:
+            return True
+        return self.max_device_rows is not None and n > self.max_device_rows
+
+    def _scan_plan(self) -> scan_plane.ScanPlan:
+        with self._subs_lock:
+            plan = self._plan_cache
+            if plan is None:
+                plan = scan_plane.plan_scan(
+                    self.ds.fact.num_rows, self.partitions,
+                    self.max_device_rows)
+                self._plan_cache = plan
+                with self._count_lock:
+                    self._pstats = [
+                        {"start": c[0][0], "end": c[-1][1], "rows_scanned": 0,
+                         "executions": 0, "batch_groups": 0, "chunks": 0}
+                        for c in plan.chunks]
+            return plan
+
+    def _scan_devices(self):
+        """JAX devices for partition pinning — populated only when several
+        exist and the fused device path is on; single-device hosts run the
+        thread-pool path unpinned."""
+        if self._devices is _UNSET:
+            devs = None
+            if self.fused:
+                try:
+                    import jax
+
+                    local = jax.local_devices()
+                    devs = local if len(local) > 1 else None
+                except Exception:
+                    devs = None
+            self._devices = devs
+        return self._devices
+
+    def _pool(self) -> ThreadPoolExecutor:
+        with self._subs_lock:
+            if self._pool_obj is None:
+                self._pool_obj = ThreadPoolExecutor(
+                    max_workers=self.partitions,
+                    thread_name_prefix="scan-part")
+            return self._pool_obj
+
+    def _execute_batch_partitioned(self, sigs: list) -> list:
+        """Batch entry of the scan plane: partition-compatible signatures go
+        through one partitioned scan (sharing per-partition scans exactly as
+        the plain batch shares the full-table scan), the rest fall back to
+        single-partition execution."""
+        self._count(batch_calls=1)
+        out: list[Optional[ResultTable]] = [None] * len(sigs)
+        par = [i for i, s in enumerate(sigs)
+               if scan_plane.partition_compatible(s)]
+        rest = [i for i in range(len(sigs)) if i not in set(par)]
+        if rest:
+            with self._count_lock:
+                self.partition_fallbacks += len(rest)
+            for i in rest:
+                self._count(executions=1,
+                            rows_scanned=self.ds.fact.num_rows)
+                out[i] = (self._execute_fused(sigs[i]) if self.fused
+                          else self._execute_host(sigs[i]))
+        if par:
+            self._count(executions=len(par))
+            for i, t in zip(par, self._execute_partitioned(
+                    [sigs[i] for i in par])):
+                out[i] = t
+        return out  # type: ignore[return-value]
+
+    def _execute_partitioned(self, sigs: list) -> list[ResultTable]:
+        """Partition-parallel fused scan: decompose each signature into its
+        composable partial form, scan every partition concurrently (streaming
+        chunks sequentially inside each partition), merge the per-partition
+        partial tables with the refresh algebra, finalize AVG from merged
+        SUM/COUNT, and apply post-aggregation on the merged result."""
+        plan = self._scan_plan()
+        pplans = [scan_plane.decompose(s) for s in sigs]
+        psigs = [p.partial_sig for p in pplans]
+        with self._count_lock:
+            self.partitioned_scans += 1
+        devices = self._scan_devices()
+        jobs = [
+            self._pool().submit(
+                self._scan_partition, p, chunks, psigs,
+                devices[p % len(devices)] if devices else None)
+            for p, chunks in enumerate(plan.chunks)]
+        partials = [j.result() for j in jobs]  # [partition][sig] tables
+        out = []
+        for i, (sig, pplan) in enumerate(zip(sigs, pplans)):
+            merged = merge_partials(
+                pplan.partial_sig, [part[i] for part in partials])
+            out.append(self._post_aggregate(
+                sig, scan_plane.finalize_partials(sig, pplan, merged)))
+        return out
+
+    def _scan_partition(self, p: int, chunks, psigs, dev) -> list[ResultTable]:
+        """One partition job: scan its chunks in order, pre-merging the
+        per-chunk partial tables (merge is associative and fold-order
+        independent, so two-level partition-then-global merging is exact).
+        ``dev`` pins all of the partition's uploads and launches to one JAX
+        device via the thread-local default-device context."""
+        if dev is not None:
+            import jax
+
+            with jax.default_device(dev):
+                return self._scan_chunks(p, chunks, psigs, dev)
+        return self._scan_chunks(p, chunks, psigs, None)
+
+    def _scan_chunks(self, p: int, chunks, psigs, dev) -> list[ResultTable]:
+        streaming = len(chunks) > 1
+        per_sig: list[list[ResultTable]] = [[] for _ in psigs]
+        sub = self._chunk_sub(chunks[0], dev, resident=not streaming)
+        for k in range(len(chunks)):
+            stager = None
+            next_sub = None
+            if k + 1 < len(chunks):
+                # double buffer: stage chunk k+1's device arrays while
+                # chunk k scans
+                next_sub = self._chunk_sub(chunks[k + 1], dev, resident=False)
+                stager = _threading.Thread(
+                    target=self._prestage, args=(next_sub, psigs, dev),
+                    daemon=True)
+                stager.start()
+            with sub._scan_mutex:
+                before = (sub.executions, sub.rows_scanned, sub.batch_groups)
+                tables = sub.execute_batch(psigs)
+                delta = (sub.executions - before[0],
+                         sub.rows_scanned - before[1],
+                         sub.batch_groups - before[2])
+            for i, t in enumerate(tables):
+                per_sig[i].append(t)
+            self._note_partition(p, rows=delta[1], executions=delta[0],
+                                 groups=delta[2], chunk_no=k)
+            if streaming:
+                self._release_chunk(sub)
+            if stager is not None:
+                stager.join()
+            if next_sub is not None:
+                sub = next_sub
+        return [tl[0] if len(tl) == 1 else merge_partials(ps, tl)
+                for ps, tl in zip(psigs, per_sig)]
+
+    def _chunk_sub(self, rng: tuple[int, int], dev,
+                   resident: bool) -> "OlapExecutor":
+        """Sub-executor over fact rows [start, end).  Non-streaming
+        partitions keep a resident sub (its memos and device arrays are the
+        warm-scan fast path); streaming chunks get ephemeral subs whose
+        device arrays are released after the scan.  Dimension uploads are
+        shared through a per-device pool — dims never cross devices, but
+        within a device every chunk of every partition reuses one upload."""
+        if resident:
+            with self._subs_lock:
+                hit = self._subs.get(rng)
+            if hit is not None:
+                return hit
+        sub = OlapExecutor(self.ds.slice_rows(*rng), impl=self.impl,
+                           fused=self.fused, memo_cap=self._memo_cap)
+        if self.fused:
+            self._share_dims(sub, dev)
+        if resident:
+            with self._subs_lock:
+                sub = self._subs.setdefault(rng, sub)
+        return sub
+
+    def _share_dims(self, sub: "OlapExecutor", dev) -> None:
+        with self._subs_lock:
+            pool = self._dim_pools.get(dev)
+            if pool is None:
+                # unpinned scans can share the parent mirror's live dimcol
+                # store; pinned devices each get their own (device arrays
+                # must not cross devices)
+                pool = (self.ds.device()._dim_store if dev is None
+                        else {})
+                self._dim_pools[dev] = pool
+        mirror = sub.ds.device()
+        for k, v in mirror._dim_store.items():
+            pool.setdefault(k, v)
+        mirror._dim_store = pool
+
+    def _release_chunk(self, sub: "OlapExecutor") -> None:
+        """Drop an ephemeral streaming chunk's device arrays (its share of
+        the dim pool survives — the pool dict is aliased, not owned)."""
+        dev = sub.ds._device
+        if dev is not None:
+            dev._store.clear()
+        sub.ds._device = None
+
+    def _note_partition(self, p: int, rows: int, executions: int,
+                        groups: int, chunk_no: int) -> None:
+        with self._count_lock:
+            self.rows_scanned += rows
+            if chunk_no > 0:
+                self.streaming_chunks += 1
+            if p < len(self._pstats):
+                st = self._pstats[p]
+                st["rows_scanned"] += rows
+                st["executions"] += executions
+                st["batch_groups"] += groups
+                st["chunks"] += 1
+
+    def _prestage(self, sub: "OlapExecutor", psigs, dev) -> None:
+        """Stager thread body: force the next chunk's fact-column uploads
+        (level alignments, measure expressions, predicate columns) while the
+        current chunk scans.  Advisory — any failure falls through to the
+        scan's own lazy build."""
+        try:
+            if dev is not None:
+                import jax
+
+                with jax.default_device(dev):
+                    self._stage_arrays(sub, psigs)
+            else:
+                self._stage_arrays(sub, psigs)
+        except Exception:
+            pass
+
+    def _stage_arrays(self, sub: "OlapExecutor", psigs) -> None:
+        if not sub.fused:
+            return
+        mirror = sub.ds.device()
+        n = sub.ds.fact.num_rows
+        mirror.cache(("ones",), lambda: np.ones(n, np.float32))
+        date_col = sub.ds.schema.fact.date_column
+        for s in psigs:
+            for lv in s.levels:
+                mirror.fact_aligned(lv)
+            for m in s.measures:
+                if m.expr != "*":
+                    sub._dev_expr(m.expr)
+            for f in s.filters:
+                mirror.fact_aligned_f32(f.col)
+            if s.time_window is not None and date_col is not None:
+                mirror.fact_aligned_f32(f"{sub.ds.fact.name}.{date_col}")
 
     def execute_raw(self, sql: str) -> Optional[ResultTable]:
         """Bypass path: out-of-scope requests run directly on the backend.
@@ -412,13 +823,14 @@ class OlapExecutor:
                 mm_keys.append(("negexpr", m.expr))
                 mm_cols.append(self.dev.cache(
                     ("negexpr", m.expr), lambda e=m.expr: -self._dev_expr(e)))
-        sum_block = self.dev.cache(
-            ("sumblock", tuple(sum_keys)), lambda: jnp.stack(sum_cols, axis=1))
-        mm_block = None
+        sum_key = ("sumblock", tuple(sum_keys))
+        sum_block = self.dev.cache(sum_key, lambda: jnp.stack(sum_cols, axis=1))
+        mm_block, mm_key = None, None
         if mm_cols:
+            mm_key = ("mmblock", tuple(mm_keys))
             mm_block = self.dev.cache(
-                ("mmblock", tuple(mm_keys)), lambda: jnp.stack(mm_cols, axis=1))
-        plan = _MeasurePlan(sum_block, mm_block, out_spec)
+                mm_key, lambda: jnp.stack(mm_cols, axis=1))
+        plan = _MeasurePlan(sum_block, mm_block, out_spec, sum_key, mm_key)
         self._mplans[measures] = plan
         return plan
 

@@ -333,12 +333,17 @@ def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> Non
     # shard-partitioned execution only pays when several shard groups can
     # actually overlap; otherwise (one group, concurrency disabled, plain
     # cache) the single cross-family execute_batch keeps the fused shared
-    # scan — one fact-table pass for the whole batch
+    # scan — one fact-table pass for the whole batch.  A partition-parallel
+    # backend (OlapExecutor(partitions=N)) already saturates the device with
+    # its own partition pool: splitting leaders across a second shard pool
+    # would nest thread pools and break the scan plane's cross-signature
+    # scan sharing, so those backends take the single execute_batch
     shard_groups: Optional[list[list[RequestState]]] = None
     shard_of = getattr(tenant.cache, "shard_index", None)
     if len(leaders) > 1 and shard_of is not None \
             and getattr(tenant.cache, "concurrent_misses", False) \
-            and hasattr(tenant.backend, "execute_batch"):
+            and hasattr(tenant.backend, "execute_batch") \
+            and getattr(tenant.backend, "partitions", 1) == 1:
         by_shard: dict[int, list[RequestState]] = {}
         for s in leaders:
             by_shard.setdefault(shard_of(s.sig), []).append(s)
@@ -401,6 +406,7 @@ def _execute_leader_group(tenant: "Tenant", group: list[RequestState]) -> None:
     when the group carries several intents, a single ``execute`` otherwise.
     Counter bumps stay with the callers (concurrent callers must not bump
     from pool threads mid-flight)."""
+    partitioned = getattr(tenant.backend, "partitions", 1) > 1
     if len(group) > 1:
         t0 = time.perf_counter()
         with tenant.gate.read:
@@ -413,6 +419,8 @@ def _execute_leader_group(tenant: "Tenant", group: list[RequestState]) -> None:
             # wall time under 'execute' (not a per-request cost)
             s.add_ms("execute", batch_ms)
             s.provenance.append("execute:batched")
+            if partitioned:
+                s.provenance.append("execute:partitioned")
     else:
         s = group[0]
         t0 = time.perf_counter()
@@ -420,6 +428,8 @@ def _execute_leader_group(tenant: "Tenant", group: list[RequestState]) -> None:
             s.table = tenant.backend.execute(s.sig)
         s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
         s.provenance.append("execute:single")
+        if partitioned:
+            s.provenance.append("execute:partitioned")
 
 
 def _execute_shard_groups(tenant: "Tenant",

@@ -333,5 +333,9 @@ class CacheService:
             if hasattr(t.cache, "stats_by_shard"):
                 d["cluster"] = t.cache.describe()
                 d["cluster"]["by_shard"] = t.cache.stats_by_shard()
+            if hasattr(t.backend, "stats"):
+                # executor counters: totals, memo sizes, per-partition scan
+                # accounting when the partition-parallel scan plane is active
+                d["backend"] = t.backend.stats()
             return d
         return {name: self.stats(name) for name in self.tenants()}

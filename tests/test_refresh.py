@@ -164,11 +164,12 @@ class TestExecutorDelta:
         ex = OlapExecutor(wl.dataset, impl="xla")
         ex.execute(sig)
         dev = wl.dataset._device
-        dim_keys = [k for k in dev._store if k[0] == "dimcol"]
+        dim_keys = list(dev._dim_store)
         assert dim_keys  # the customer.c_region upload
         part = wl.dataset.append_rows(make_delta(wl.dataset, 200))
         assert wl.dataset._device is dev  # mirror survives the append
-        assert sorted(dev._store) == sorted(dim_keys)  # fact arrays dropped
+        assert not dev._store  # fact-aligned arrays dropped
+        assert sorted(dev._dim_store) == sorted(dim_keys)  # dims survive
         got = ex.execute_batch([sig], partition=(part.start_row, part.end_row))
         oracle = OlapExecutor(
             wl.dataset.slice_rows(part.start_row, part.end_row), impl="numpy")
