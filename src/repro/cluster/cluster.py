@@ -36,9 +36,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-import threading
 from typing import Optional, Sequence
 
+from ..analysis.sanitizer import allow_same_class_order, make_lock
 from ..core import derivations as dv
 from ..core.cache import (CacheEntry, CacheStats, LookupResult, SemanticCache)
 from ..core.schema import StarSchema
@@ -117,9 +117,15 @@ class CacheCluster:
         self.concurrent_misses = concurrent_misses
         # serializes topology changes; individual operations take only the
         # target shard's lock
-        self._topology_lock = threading.Lock()
-        self._retired_stats = CacheStats()  # counters of removed shards
-        self._shards: list[CacheShard] = [
+        self._topology_lock = make_lock("CacheCluster._topology_lock")
+        # the rebalance nests every shard lock (in shard-index order) under
+        # the topology lock: register that deterministic same-class order
+        allow_same_class_order("CacheShard.lock")
+        self._retired_stats = CacheStats()  # guarded-by: self._topology_lock
+        # rebound only by set_shards under the topology lock; lock-free
+        # readers take a consistent list snapshot and re-validate routes
+        # after acquiring the target shard's lock (see _shard_op)
+        self._shards: list[CacheShard] = [  # guarded-by: self._topology_lock
             CacheShard(i, self._new_cache(shards)) for i in range(shards)
         ]
 

@@ -17,6 +17,8 @@ from __future__ import annotations
 import threading
 from typing import TYPE_CHECKING, Optional
 
+from ..analysis.sanitizer import note_blocking
+
 if TYPE_CHECKING:  # pragma: no cover
     from ..core.table import ResultTable
     from .shard import CacheShard
@@ -32,8 +34,11 @@ class Flight:
     def __init__(self, key: str, shard: "CacheShard"):
         self.key = key
         self.shard = shard
-        self.table: Optional["ResultTable"] = None
-        self.error: Optional[BaseException] = None
+        # resolved exactly once through the owning shard's complete_flight /
+        # fail_flight, which hold the shard lock; read by followers only
+        # after the event is set (publication happens-before the wait)
+        self.table: Optional["ResultTable"] = None  # guarded-by: self.shard.lock
+        self.error: Optional[BaseException] = None  # guarded-by: self.shard.lock
         self._event = threading.Event()
 
     @property
@@ -45,14 +50,19 @@ class Flight:
         return self._event.is_set() and self.error is None
 
     def wait(self, timeout: Optional[float] = DEFAULT_FLIGHT_TIMEOUT_S) -> bool:
-        """Block until the leader resolves the flight; False on timeout."""
+        """Block until the leader resolves the flight; False on timeout.
+
+        A follower must never wait while holding a lock the leader needs to
+        resolve the flight (the leader stores + completes under the shard
+        lock) — the sanitizer's blocking-call check enforces that."""
+        note_blocking("Flight.wait")
         return self._event.wait(timeout)
 
     # resolution happens through the owning shard (shard.complete_flight /
     # shard.fail_flight) so deregistration and result publication stay under
     # one lock; these setters are the shard-internal halves.
     def _resolve(self, table: Optional["ResultTable"],
-                 error: Optional[BaseException]) -> None:
+                 error: Optional[BaseException]) -> None:  # requires-lock: self.shard.lock
         self.table = table
         self.error = error
         self._event.set()

@@ -9,9 +9,9 @@ which is where the cluster's multi-thread throughput comes from.
 """
 from __future__ import annotations
 
-import threading
 from typing import Optional, Sequence
 
+from ..analysis.sanitizer import make_lock
 from ..core.cache import CacheEntry, LookupResult, SemanticCache
 from ..core.signature import Signature
 from ..core.table import ResultTable
@@ -22,10 +22,12 @@ class CacheShard:
     """A locked ``SemanticCache`` + the single-flight registry for its keys."""
 
     def __init__(self, index: int, cache: SemanticCache):
-        self.index = index
+        # index is rewritten only by the stop-the-world rebalance, which
+        # holds every shard lock
+        self.index = index  # guarded-by: external[cluster rebalance holds all shard locks]
         self.cache = cache
-        self.lock = threading.RLock()
-        self._inflight: dict[str, Flight] = {}
+        self.lock = make_lock("CacheShard.lock", reentrant=True)
+        self._inflight: dict[str, Flight] = {}  # guarded-by: self.lock
 
     # -------------------------------------------------------------- lookups
     def lookup(self, sig: Signature, request_origin: str = "sql") -> LookupResult:

@@ -28,6 +28,8 @@ import json
 import re
 from typing import Optional, Protocol
 
+from ..analysis.sanitizer import make_lock
+
 from .signature import Filter, Measure, Signature, TimeWindow
 
 # ---------------------------------------------------------------- vocabulary
@@ -462,19 +464,25 @@ class MemoizedNL:
 
     def __init__(self, inner: NLCanonicalizer):
         self.inner = inner
-        self._memo: dict[tuple[str, Optional[str]], NLResult] = {}
-        self.calls = 0
-        self.memo_hits = 0
+        # one memo serves every request thread of a tenant; the inner model
+        # call runs outside the lock (a lost race costs one duplicate model
+        # call for the same text — setdefault keeps one canonical result)
+        self._lock = make_lock("MemoizedNL._lock")
+        self._memo: dict[tuple[str, Optional[str]], NLResult] = {}  # guarded-by: self._lock
+        self.calls = 0  # guarded-by: self._lock
+        self.memo_hits = 0  # guarded-by: self._lock
 
     def canonicalize(self, text: str, now: Optional[_dt.date] = None) -> NLResult:
         key = (text, now.isoformat() if now else None)
-        if key in self._memo:
-            self.memo_hits += 1
-            return self._memo[key]
-        self.calls += 1
+        with self._lock:
+            res = self._memo.get(key)
+            if res is not None:
+                self.memo_hits += 1
+                return res
+            self.calls += 1
         res = self.inner.canonicalize(text, now)
-        self._memo[key] = res
-        return res
+        with self._lock:
+            return self._memo.setdefault(key, res)
 
     def canonicalize_batch(self, texts: list[str],
                            now: Optional[_dt.date] = None) -> list[NLResult]:
@@ -482,27 +490,32 @@ class MemoizedNL:
         to the inner canonicalizer's batch entry point in one call (falling
         back to a loop when it has none)."""
         nowk = now.isoformat() if now else None
-        fresh = [t for t in texts if (t, nowk) not in self._memo]
-        # preserve first-occurrence order, drop duplicates within the batch
-        fresh = list(dict.fromkeys(fresh))
+        with self._lock:
+            fresh = [t for t in texts if (t, nowk) not in self._memo]
+            # preserve first-occurrence order, drop duplicates within batch
+            fresh = list(dict.fromkeys(fresh))
+            if fresh:
+                self.calls += len(fresh)
         if fresh:
             batch_fn = getattr(self.inner, "canonicalize_batch", None)
             if batch_fn is not None:
                 results = batch_fn(fresh, now)
             else:
                 results = [self.inner.canonicalize(t, now) for t in fresh]
-            self.calls += len(fresh)
-            for t, r in zip(fresh, results):
-                self._memo[(t, nowk)] = r
         fresh_set = set(fresh)
-        out = []
-        for t in texts:
-            if t not in fresh_set:
-                self.memo_hits += 1
-            out.append(self._memo[(t, nowk)])
+        with self._lock:
+            if fresh:
+                for t, r in zip(fresh, results):
+                    self._memo.setdefault((t, nowk), r)
+            out = []
+            for t in texts:
+                if t not in fresh_set:
+                    self.memo_hits += 1
+                out.append(self._memo[(t, nowk)])
         return out
 
     def clear(self) -> None:
-        self._memo.clear()
-        self.calls = 0
-        self.memo_hits = 0
+        with self._lock:
+            self._memo.clear()
+            self.calls = 0
+            self.memo_hits = 0

@@ -30,6 +30,7 @@ import re
 from collections import OrderedDict
 from typing import Optional
 
+from ..analysis.sanitizer import make_lock
 from . import sqlparse as sp
 from .schema import AmbiguousColumn, StarSchema, UnknownColumn
 from .signature import (
@@ -136,6 +137,19 @@ class _WindowAccum:
 # ------------------------------------------------------------- canonicalizer
 
 
+class _ParseCtx:
+    """Resolution context for one ``from_ast`` invocation (alias map and
+    joined-dimension set).  Threaded through the helpers explicitly: the
+    canonicalizer instance is shared across request threads, so per-parse
+    state must never live on ``self``."""
+
+    __slots__ = ("aliases", "joined")
+
+    def __init__(self, aliases: dict, joined: set):
+        self.aliases = aliases
+        self.joined = joined
+
+
 class _Template:
     """One cached query template: the slotted AST plus a bounded LRU memo of
     ``(literal_values, scope) -> Signature`` bindings.  Signatures are frozen
@@ -163,77 +177,102 @@ class SQLCanonicalizer:
         self.max_templates = max_templates
         self.max_bindings = max_bindings_per_template
         self.max_texts = 4 * max_bindings_per_template
-        self._templates: "OrderedDict[tuple, _Template]" = OrderedDict()
+        # one canonicalizer serves every request thread of a tenant (the
+        # sharded-cluster regime): the LRU OrderedDicts and counters below
+        # are guarded by _lock — move_to_end/popitem on a shared OrderedDict
+        # can corrupt its recency list under a data race, not just drop a
+        # count.  Parsing and from_ast run *outside* the lock (pure); a lost
+        # cold-parse race costs one duplicate parse, never a wrong memo.
+        self._lock = make_lock("SQLCanonicalizer._lock")
+        self._templates: "OrderedDict[tuple, _Template]" = OrderedDict()  # guarded-by: self._lock
         # tier-0: exact text -> signature (a verbatim dashboard re-arrival
         # skips even tokenization; canonicalization is deterministic, so an
         # identical (text, scope) can only ever produce the identical result)
-        self._text_memo: "OrderedDict[tuple, Signature]" = OrderedDict()
+        self._text_memo: "OrderedDict[tuple, Signature]" = OrderedDict()  # guarded-by: self._lock
         # fast-path counters (surfaced by CacheService.stats())
-        self.text_hits = 0         # verbatim repeat: tokenize skipped too
-        self.template_hits = 0     # fingerprint seen before: parse skipped
-        self.template_misses = 0   # cold tokenize + parse
-        self.binding_hits = 0      # memoized (literals, scope): from_ast skipped
-        self.binding_misses = 0    # warm template, fresh literals: rebind + from_ast
+        self.text_hits = 0  # guarded-by: self._lock
+        self.template_hits = 0  # guarded-by: self._lock
+        self.template_misses = 0  # guarded-by: self._lock
+        self.binding_hits = 0  # guarded-by: self._lock
+        self.binding_misses = 0  # guarded-by: self._lock
 
     # -- public entry
     def canonicalize(self, sql: str, scope: Optional[str] = None) -> Signature:
         if not self.template_cache:
             return self.from_ast(sp.parse(sql), scope=scope)
         tkey = (sql, scope)
-        sig = self._text_memo.get(tkey)
-        if sig is not None:
-            self.text_hits += 1
-            self._text_memo.move_to_end(tkey)
-            return sig
+        with self._lock:
+            sig = self._text_memo.get(tkey)
+            if sig is not None:
+                self.text_hits += 1  # verbatim repeat: tokenize skipped too
+                self._text_memo.move_to_end(tkey)
+                return sig
         sig = self._canonicalize_template(sql, scope)
-        self._text_memo[tkey] = sig
-        if len(self._text_memo) > self.max_texts:
-            self._text_memo.popitem(last=False)
+        with self._lock:
+            self._text_memo[tkey] = sig
+            if len(self._text_memo) > self.max_texts:
+                self._text_memo.popitem(last=False)
         return sig
 
     def _canonicalize_template(self, sql: str, scope: Optional[str]) -> Signature:
-        fp, tokens, values = sp.template_of(sql)
-        tpl = self._templates.get(fp)
+        fp, tokens, values = sp.template_of(sql)  # pure: outside the lock
+        bkey = (values, scope)
+        with self._lock:
+            tpl = self._templates.get(fp)
+            if tpl is None:
+                self.template_misses += 1  # cold tokenize + parse
+            else:
+                self.template_hits += 1  # fingerprint seen: parse skipped
+                self._templates.move_to_end(fp)
+                sig = tpl.bindings.get(bkey)
+                if sig is not None:
+                    self.binding_hits += 1  # memoized: from_ast skipped
+                    tpl.bindings.move_to_end(bkey)
+                    return sig
         if tpl is None:
-            self.template_misses += 1
-            ast = sp.parse_slotted(tokens, sql)
+            ast = sp.parse_slotted(tokens, sql)  # cold parse, outside the lock
             # cache the template even if from_ast below fails: the *parse* is
             # sound for every text with this fingerprint, and whether a given
             # literal binding canonicalizes (e.g. a time value that folds
             # into a window vs one that doesn't) is decided per binding
-            self._templates[fp] = tpl = _Template(ast)
-            if len(self._templates) > self.max_templates:
-                self._templates.popitem(last=False)
-        else:
-            self.template_hits += 1
-            self._templates.move_to_end(fp)
-        bkey = (values, scope)
-        sig = tpl.bindings.get(bkey)
-        if sig is not None:
-            self.binding_hits += 1
-            tpl.bindings.move_to_end(bkey)
-            return sig
-        self.binding_misses += 1
+            with self._lock:
+                tpl = self._templates.get(fp)
+                if tpl is None:  # lost parse races adopt the winner's template
+                    self._templates[fp] = tpl = _Template(ast)
+                    if len(self._templates) > self.max_templates:
+                        self._templates.popitem(last=False)
+                sig = tpl.bindings.get(bkey)
+                if sig is not None:
+                    self.binding_hits += 1
+                    tpl.bindings.move_to_end(bkey)
+                    return sig
+        with self._lock:
+            self.binding_misses += 1  # warm template, fresh literals
         sig = self.from_ast(sp.bind_slots(tpl.ast, values), scope=scope)
         # only successful canonicalizations are memoized; failures keep
-        # raising per arrival exactly like the cold path
-        tpl.bindings[bkey] = sig
-        if len(tpl.bindings) > self.max_bindings:
-            tpl.bindings.popitem(last=False)
+        # raising per arrival exactly like the cold path.  setdefault: a
+        # concurrent binder of the same key keeps one canonical instance
+        with self._lock:
+            sig = tpl.bindings.setdefault(bkey, sig)
+            tpl.bindings.move_to_end(bkey)
+            if len(tpl.bindings) > self.max_bindings:
+                tpl.bindings.popitem(last=False)
         return sig
 
     def template_stats(self) -> dict:
         """Template-cache counters: per-arrival outcome totals plus the
         current footprint (templates held, bindings memoized)."""
-        return {
-            "text_hits": self.text_hits,
-            "template_hits": self.template_hits,
-            "template_misses": self.template_misses,
-            "binding_hits": self.binding_hits,
-            "binding_misses": self.binding_misses,
-            "templates": len(self._templates),
-            "bindings": sum(len(t.bindings) for t in self._templates.values()),
-        }
+        with self._lock:
+            return {
+                "text_hits": self.text_hits,
+                "template_hits": self.template_hits,
+                "template_misses": self.template_misses,
+                "binding_hits": self.binding_hits,
+                "binding_misses": self.binding_misses,
+                "templates": len(self._templates),
+                "bindings": sum(len(t.bindings)
+                                for t in self._templates.values()),
+            }
 
     def from_ast(self, q: sp.Query, scope: Optional[str] = None) -> Signature:
         sch = self.schema
@@ -268,8 +307,9 @@ class SQLCanonicalizer:
                 )
             alias_to_table[j.alias] = dim.name
             joined_dims.add(dim.name)
-        self._aliases = alias_to_table
-        self._joined = joined_dims
+        # parse-scoped resolution context: threaded through the helpers
+        # rather than stored on the (shared, concurrently-used) instance
+        ctx = _ParseCtx(aliases=alias_to_table, joined=joined_dims)
 
         # ---- measures and grouping levels from the SELECT list
         measures: list[Measure] = []
@@ -278,14 +318,14 @@ class SQLCanonicalizer:
         select_levels: list[str] = []
         for item in q.select:
             if isinstance(item.expr, sp.AggCall):
-                m = self._measure(item.expr)
+                m = self._measure(item.expr, ctx)
                 idx = len(measures)
                 measures.append(m)
                 if item.alias:
                     alias_to_measure[item.alias] = idx
                 expr_to_measure[f"{m.agg}|{m.expr}|{m.distinct}"] = idx
             elif isinstance(item.expr, sp.ColRef):
-                select_levels.append(self._qualify(item.expr))
+                select_levels.append(self._qualify(item.expr, ctx))
             else:
                 raise sp.UnsupportedQuery(
                     "non-aggregate SELECT expressions are outside the OLAP subset"
@@ -293,7 +333,7 @@ class SQLCanonicalizer:
         if not measures:
             raise sp.UnsupportedQuery("queries without aggregation are outside the OLAP subset")
 
-        group_levels = [self._qualify(c) for c in q.group_by]
+        group_levels = [self._qualify(c, ctx) for c in q.group_by]
         if set(select_levels) - set(group_levels):
             raise CanonicalizationError(
                 "SELECT columns not covered by GROUP BY: "
@@ -304,19 +344,20 @@ class SQLCanonicalizer:
         filters: list[Filter] = []
         wacc = _WindowAccum()
         for p in q.where:
-            self._classify_predicate(p, filters, wacc)
+            self._classify_predicate(p, filters, wacc, ctx)
         tw = wacc.window()
 
         # ---- HAVING over selected measures
         having: list[HavingClause] = []
         for p in q.having:
-            having.append(self._having(p, alias_to_measure, expr_to_measure))
+            having.append(
+                self._having(p, alias_to_measure, expr_to_measure, ctx))
 
         # ---- ORDER BY / LIMIT
         order: list[OrderKey] = []
         for expr, desc in q.order_by:
             if isinstance(expr, sp.AggCall):
-                m = self._measure(expr)
+                m = self._measure(expr, ctx)
                 k = f"{m.agg}|{m.expr}|{m.distinct}"
                 if k not in expr_to_measure:
                     raise CanonicalizationError("ORDER BY aggregate not in SELECT")
@@ -326,7 +367,7 @@ class SQLCanonicalizer:
                 if expr.table is None and name in alias_to_measure:
                     order.append(OrderKey(f"measure:{alias_to_measure[name]}", desc))
                 else:
-                    lv = self._qualify(expr)
+                    lv = self._qualify(expr, ctx)
                     if lv not in group_levels:
                         raise CanonicalizationError(f"ORDER BY {lv} not in GROUP BY")
                     order.append(OrderKey(lv, desc))
@@ -364,61 +405,62 @@ class SQLCanonicalizer:
             raise CanonicalizationError(str(e)) from e
         return t
 
-    def _qualify(self, c: sp.ColRef) -> str:
+    def _qualify(self, c: sp.ColRef, ctx: "_ParseCtx") -> str:
         """Resolve a column ref to canonical 'table.column'."""
-        t = self._table_of(c, self._aliases)
+        t = self._table_of(c, ctx.aliases)
         try:
             t2, col = self.schema.resolve_column(c.column, table=t)
         except (AmbiguousColumn, UnknownColumn) as e:
             raise CanonicalizationError(str(e)) from e
-        if t2 != self.schema.fact.name and t2 not in self._joined:
+        if t2 != self.schema.fact.name and t2 not in ctx.joined:
             raise CanonicalizationError(
                 f"column {t2}.{col.name} referenced without joining {t2!r}"
             )
         return f"{t2}.{col.name}"
 
     # ----------------------------------------------------------- expressions
-    def _canon_expr(self, e: sp.Expr) -> str:
+    def _canon_expr(self, e: sp.Expr, ctx: "_ParseCtx") -> str:
         """Canonical expression string: fully-qualified identifiers, sorted
         operands under commutative ops, canonical literal formats."""
         if isinstance(e, sp.ColRef):
-            return self._qualify(e)
+            return self._qualify(e, ctx)
         if isinstance(e, sp.Literal):
             v = e.value
             if isinstance(v, float) and v == int(v):
                 return str(int(v))
             return repr(v) if isinstance(v, str) else str(v)
         if isinstance(e, sp.BinOp):
-            l, r = self._canon_expr(e.left), self._canon_expr(e.right)
+            l, r = self._canon_expr(e.left, ctx), self._canon_expr(e.right, ctx)
             if e.op in ("+", "*"):
                 # flatten same-op chains and sort operands
-                parts = sorted(self._flatten(e, e.op))
+                parts = sorted(self._flatten(e, e.op, ctx))
                 return "(" + e.op.join(parts) + ")"
             return f"({l}{e.op}{r})"
         raise sp.UnsupportedQuery("aggregate nested inside expression")
 
-    def _flatten(self, e: sp.Expr, op: str) -> list[str]:
+    def _flatten(self, e: sp.Expr, op: str, ctx: "_ParseCtx") -> list[str]:
         if isinstance(e, sp.BinOp) and e.op == op:
-            return self._flatten(e.left, op) + self._flatten(e.right, op)
-        return [self._canon_expr(e)]
+            return self._flatten(e.left, op, ctx) + \
+                self._flatten(e.right, op, ctx)
+        return [self._canon_expr(e, ctx)]
 
-    def _measure(self, a: sp.AggCall) -> Measure:
+    def _measure(self, a: sp.AggCall, ctx: "_ParseCtx") -> Measure:
         if a.arg is None:  # COUNT(*)
             return Measure("COUNT", "*", distinct=False)
-        expr = self._canon_expr(a.arg)
+        expr = self._canon_expr(a.arg, ctx)
         if a.distinct and a.func != "COUNT":
             raise sp.UnsupportedQuery(f"{a.func}(DISTINCT …) is outside the OLAP subset")
-        self._check_measure_types(a)
+        self._check_measure_types(a, ctx)
         return Measure(a.func, expr, distinct=a.distinct)
 
-    def _check_measure_types(self, a: sp.AggCall) -> None:
+    def _check_measure_types(self, a: sp.AggCall, ctx: "_ParseCtx") -> None:
         """Aggregations besides COUNT require numeric arguments."""
         if a.func == "COUNT":
             return
 
         def visit(e: sp.Expr) -> None:
             if isinstance(e, sp.ColRef):
-                t = self._table_of(e, self._aliases)
+                t = self._table_of(e, ctx.aliases)
                 _, col = self.schema.resolve_column(e.column, table=t)
                 if not col.is_numeric():
                     raise CanonicalizationError(
@@ -432,7 +474,8 @@ class SQLCanonicalizer:
 
     # ------------------------------------------------------------ predicates
     def _classify_predicate(
-        self, p: sp.Predicate, filters: list[Filter], wacc: _WindowAccum
+        self, p: sp.Predicate, filters: list[Filter], wacc: _WindowAccum,
+        ctx: "_ParseCtx"
     ) -> None:
         left, op, right = p.left, p.op, p.right
         # normalize literal-on-left comparisons
@@ -441,7 +484,7 @@ class SQLCanonicalizer:
             op = {"<": ">", ">": "<", "<=": ">=", ">=": "<="}.get(op, op)
         if not isinstance(left, sp.ColRef):
             raise sp.UnsupportedQuery("predicate left side must be a column")
-        col = self._qualify(left)
+        col = self._qualify(left, ctx)
         tab, cname = col.split(".", 1)
         kind = self._time_kind(tab, cname)
         if kind is not None and self._try_time(col, kind, op, right, wacc):
@@ -510,7 +553,8 @@ class SQLCanonicalizer:
         return False  # 'in' over time levels stays an ordinary filter
 
     # --------------------------------------------------------------- having
-    def _having(self, p: sp.Predicate, alias_idx, expr_idx) -> HavingClause:
+    def _having(self, p: sp.Predicate, alias_idx, expr_idx,
+                ctx: "_ParseCtx") -> HavingClause:
         left, op, right = p.left, p.op, p.right
         if op in ("between", "in"):
             raise sp.UnsupportedQuery("HAVING BETWEEN/IN is outside the OLAP subset")
@@ -520,7 +564,7 @@ class SQLCanonicalizer:
         if not isinstance(right, sp.Literal):
             raise sp.UnsupportedQuery("HAVING must compare a measure to a literal")
         if isinstance(left, sp.AggCall):
-            m = self._measure(left)
+            m = self._measure(left, ctx)
             k = f"{m.agg}|{m.expr}|{m.distinct}"
             if k not in expr_idx:
                 raise CanonicalizationError("HAVING aggregate not in SELECT")

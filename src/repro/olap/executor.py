@@ -48,6 +48,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from ..analysis.sanitizer import make_lock
 from ..core import sqlparse as sp
 from ..core.refresh import merge_partials
 from ..core.signature import Signature
@@ -79,9 +80,9 @@ class _LRU:
     def __init__(self, cap: int,
                  on_evict: Optional[Callable[[object, object], None]] = None):
         self.cap = int(cap)
-        self._d: collections.OrderedDict = collections.OrderedDict()
+        self._d: collections.OrderedDict = collections.OrderedDict()  # guarded-by: self._lock
         self._on_evict = on_evict
-        self._lock = _threading.Lock()
+        self._lock = make_lock("_LRU._lock")
 
     def get(self, key, default=None):
         with self._lock:
@@ -177,32 +178,43 @@ class OlapExecutor:
         self.max_device_rows = max_device_rows
         self._memo_cap = int(memo_cap)
         self._canon = SQLCanonicalizer(dataset.schema)
-        self._level_cache: _LRU = _LRU(memo_cap)
-        self._gids_cache: _LRU = _LRU(memo_cap, self._evict_gids)
-        self._rect_cache: _LRU = _LRU(memo_cap, self._evict_rect)
-        self._mplans: _LRU = _LRU(memo_cap, self._evict_mplan)
+        self._level_cache: _LRU = _LRU(memo_cap)  # guarded-by: external[_LRU synchronizes internally via _LRU._lock]
+        self._gids_cache: _LRU = _LRU(memo_cap, self._evict_gids)  # guarded-by: external[_LRU synchronizes internally via _LRU._lock]
+        self._rect_cache: _LRU = _LRU(memo_cap, self._evict_rect)  # guarded-by: external[_LRU synchronizes internally via _LRU._lock]
+        self._mplans: _LRU = _LRU(memo_cap, self._evict_mplan)  # guarded-by: external[_LRU synchronizes internally via _LRU._lock]
+        # per-column predicate probes: idempotent memos (the value is a pure
+        # function of the column), registered as benign races in the
+        # analysis registry rather than lock-guarded
         self._exact_cols: dict[str, bool] = {}
         self._nan_cols: dict[str, bool] = {}
-        self._ds_version = getattr(dataset, "version", 0)
-        self.executions = 0
-        self.rows_scanned = 0
-        self.batch_calls = 0  # execute_batch invocations (service miss planner)
-        self.batch_groups = 0  # shared-scan groups actually fused across those
-        self.partitioned_scans = 0  # scan-plane invocations
-        self.partition_fallbacks = 0  # sigs routed to single-partition scan
-        self.streaming_chunks = 0  # chunk scans beyond the first per partition
+        # version only changes while the tenant's exclusive write gate is
+        # held (advance_snapshot), so _sync's clears never race a scan
+        self._ds_version = getattr(dataset, "version", 0)  # guarded-by: external[tenant ReadWriteGate.write serializes version changes]
+        self.executions = 0  # guarded-by: self._count_lock
+        self.rows_scanned = 0  # guarded-by: self._count_lock
+        # execute_batch invocations (service miss planner)
+        self.batch_calls = 0  # guarded-by: self._count_lock
+        # shared-scan groups actually fused across those
+        self.batch_groups = 0  # guarded-by: self._count_lock
+        # scan-plane invocations
+        self.partitioned_scans = 0  # guarded-by: self._count_lock
+        # sigs routed to single-partition scan
+        self.partition_fallbacks = 0  # guarded-by: self._count_lock
+        # chunk scans beyond the first per partition
+        self.streaming_chunks = 0  # guarded-by: self._count_lock
         # the cluster miss planner runs shard groups on concurrent threads;
         # bare '+=' on shared counters would drop increments
-        self._count_lock = _threading.Lock()
+        self._count_lock = make_lock("OlapExecutor._count_lock")
         # serializes scans on this executor when it acts as a resident
         # per-partition sub (keeps counter deltas attributable per scan)
-        self._scan_mutex = _threading.Lock()
-        self._subs_lock = _threading.Lock()
-        self._subs: dict[tuple[int, int], "OlapExecutor"] = {}
-        self._dim_pools: dict = {}  # device -> shared dimcol store dict
-        self._pool_obj: Optional[ThreadPoolExecutor] = None
-        self._plan_cache: Optional[scan_plane.ScanPlan] = None
-        self._pstats: list[dict] = []
+        self._scan_mutex = make_lock("OlapExecutor._scan_mutex")
+        self._subs_lock = make_lock("OlapExecutor._subs_lock")
+        self._subs: dict[tuple[int, int], "OlapExecutor"] = {}  # guarded-by: self._subs_lock
+        # device -> shared dimcol store dict
+        self._dim_pools: dict = {}  # guarded-by: self._subs_lock
+        self._pool_obj: Optional[ThreadPoolExecutor] = None  # guarded-by: self._subs_lock
+        self._plan_cache: Optional[scan_plane.ScanPlan] = None  # guarded-by: self._subs_lock
+        self._pstats: list[dict] = []  # guarded-by: self._count_lock
         self._devices = _UNSET
 
     def _count(self, executions: int = 0, rows_scanned: int = 0,

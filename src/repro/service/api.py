@@ -17,6 +17,7 @@ import threading
 from collections import deque
 from typing import Any, Optional, Protocol, Sequence
 
+from ..analysis.sanitizer import make_lock, note_acquire, note_release
 from ..core.middleware import Backend
 from ..core.signature import Filter, OrderKey, Signature, TimeWindow
 from ..core.table import ResultTable
@@ -198,17 +199,25 @@ class ReadWriteGate:
 
     def __init__(self):
         self._cond = threading.Condition()
-        self._readers = 0
-        self._writer = False
-        self._writers_waiting = 0
+        self._readers = 0  # guarded-by: self._cond
+        self._writer = False  # guarded-by: self._cond
+        self._writers_waiting = 0  # guarded-by: self._cond
+        # sanitizer pseudo-lock tokens: the gate is held *across* its body
+        # (unlike _cond, which is released while waiting), so the held span
+        # is reported manually per side; read tokens are per-thread
+        self._san_read = threading.local()
+        self._san_write = None  # guarded-by: external[only the single gate-holding writer touches it]
 
     def acquire_read(self) -> None:
         with self._cond:
             while self._writer or self._writers_waiting:
                 self._cond.wait()
             self._readers += 1
+        self._san_read.token = note_acquire("ReadWriteGate.read", shared=True)
 
     def release_read(self) -> None:
+        note_release(getattr(self._san_read, "token", None))
+        self._san_read.token = None
         with self._cond:
             self._readers -= 1
             if not self._readers:
@@ -223,8 +232,11 @@ class ReadWriteGate:
             finally:
                 self._writers_waiting -= 1
             self._writer = True
+        self._san_write = note_acquire("ReadWriteGate.write")
 
     def release_write(self) -> None:
+        note_release(self._san_write)
+        self._san_write = None
         with self._cond:
             self._writer = False
             self._cond.notify_all()
@@ -270,19 +282,23 @@ class TenantStats:
     plain field *reads* stay lock-free (single int loads are atomic under the
     GIL; momentarily torn cross-field views are acceptable for stats)."""
 
-    requests: int = 0
-    batches: int = 0
-    bypasses: int = 0
-    nl_gated: int = 0
-    backend_executions: int = 0
-    batched_misses: int = 0  # misses served through a shared execute_batch scan
-    deduped_misses: int = 0  # in-batch duplicates coalesced onto one execution
-    coalesced_misses: int = 0  # cross-thread misses served by another's flight
-    stores: int = 0
-    stage_timings: dict = dataclasses.field(
+    requests: int = 0  # guarded-by: self._lock
+    batches: int = 0  # guarded-by: self._lock
+    bypasses: int = 0  # guarded-by: self._lock
+    nl_gated: int = 0  # guarded-by: self._lock
+    backend_executions: int = 0  # guarded-by: self._lock
+    # misses served through a shared execute_batch scan
+    batched_misses: int = 0  # guarded-by: self._lock
+    # in-batch duplicates coalesced onto one execution
+    deduped_misses: int = 0  # guarded-by: self._lock
+    # cross-thread misses served by another's flight
+    coalesced_misses: int = 0  # guarded-by: self._lock
+    stores: int = 0  # guarded-by: self._lock
+    stage_timings: dict = dataclasses.field(  # guarded-by: self._lock
         default_factory=dict, repr=False, compare=False)
     _lock: threading.Lock = dataclasses.field(
-        default_factory=threading.Lock, init=False, repr=False, compare=False)
+        default_factory=lambda: make_lock("TenantStats._lock"),
+        init=False, repr=False, compare=False)
 
     def bump(self, **deltas: int) -> None:
         """Atomically add to one or more counter fields.  ``x += n`` on a

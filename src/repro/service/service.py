@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Optional, Sequence
 
+from ..analysis.sanitizer import make_lock
 from ..cluster import CacheCluster
 from ..core.cache import SemanticCache
 from ..core.metrics import MetricLayer
@@ -63,7 +64,9 @@ class Tenant:
     nl: Optional[NLCanonicalizer]
     policy: SafetyPolicy
     metrics: Optional[MetricLayer]
-    snapshot_id: str
+    # mutated only by lifecycle operations while they hold the exclusive
+    # write gate; request threads read it when tagging stores
+    snapshot_id: str  # guarded-by: external[tenant ReadWriteGate.write]
     sql_canon: SQLCanonicalizer
     validator: SignatureValidator
     stats: TenantStats
@@ -74,7 +77,11 @@ class Tenant:
 
 class CacheService:
     def __init__(self):
-        self._tenants: dict[str, Tenant] = {}
+        # registration is rare but may race live traffic (an operator adding
+        # a tenant while request threads resolve others): writes serialize
+        # on _reg_lock; reads are lock-free dict probes (GIL-atomic)
+        self._tenants: dict[str, Tenant] = {}  # guarded-by: self._reg_lock
+        self._reg_lock = make_lock("CacheService._reg_lock")
 
     # ----------------------------------------------------------- tenants
     def register_tenant(
@@ -103,8 +110,6 @@ class CacheService:
         shard; ``shards=1`` is behavior-compatible with the unsharded path.
         A pre-built ``CacheCluster`` may also be passed directly as
         ``cache=``."""
-        if name in self._tenants:
-            raise ValueError(f"tenant {name!r} already registered")
         if shards is not None:
             if isinstance(cache, CacheCluster):
                 if cache.num_shards != shards:
@@ -121,7 +126,13 @@ class CacheService:
             validator=SignatureValidator(schema),
             stats=TenantStats(),
         )
-        self._tenants[name] = t
+        with self._reg_lock:
+            # check-then-insert must be one atomic step: two concurrent
+            # registrations of the same name used to both pass the check
+            # and silently overwrite each other
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            self._tenants[name] = t
         return t
 
     def tenant(self, name: str = DEFAULT_TENANT) -> Tenant:
@@ -212,15 +223,22 @@ class CacheService:
         untouched.
         """
         t = self.tenant(tenant)
-        if snapshot_id:
-            t.snapshot_id = snapshot_id
-        rep = RefreshReport(tenant=t.name, snapshot_id=t.snapshot_id,
-                            updated_start=updated_start, updated_end=updated_end)
         if delta is None:
-            before = len(t.cache)
-            rep.dropped = t.cache.invalidate_snapshot(updated_start, updated_end)
-            rep.unaffected = before - rep.dropped
-            return rep
+            # the snapshot advance (id bump + drop rule) runs under the
+            # exclusive write gate: request threads tag stores with
+            # t.snapshot_id, and a torn read during the bump would tag a
+            # fresh store with a half-advanced snapshot
+            with t.gate.write:
+                if snapshot_id:
+                    t.snapshot_id = snapshot_id
+                rep = RefreshReport(
+                    tenant=t.name, snapshot_id=t.snapshot_id,
+                    updated_start=updated_start, updated_end=updated_end)
+                before = len(t.cache)
+                rep.dropped = t.cache.invalidate_snapshot(
+                    updated_start, updated_end)
+                rep.unaffected = before - rep.dropped
+                return rep
         ds = getattr(t.backend, "ds", None)
         if ds is None or not hasattr(ds, "append_rows") \
                 or not _accepts_partition(getattr(t.backend, "execute_batch", None)):
@@ -231,6 +249,11 @@ class CacheService:
                 "backend exposing its Dataset as .ds and a partition-capable "
                 "execute_batch")
         with t.gate.write:  # exclusive vs request-thread backend scans
+            if snapshot_id:
+                t.snapshot_id = snapshot_id
+            rep = RefreshReport(tenant=t.name, snapshot_id=t.snapshot_id,
+                                updated_start=updated_start,
+                                updated_end=updated_end)
             return self._advance_with_delta(
                 t, rep, ds, delta, updated_start, updated_end,
                 refresh=refresh, recompute_fallbacks=recompute_fallbacks)

@@ -1,0 +1,23 @@
+"""Known-bad interning/immutability usage for tests/test_analysis.py."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Point:
+    x: int
+    y: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "x", int(self.x))  # in-class: allowed
+
+
+def retag(p: Point) -> None:
+    object.__setattr__(p, "x", 0)  # FINDING: immutability (pierces frozen)
+
+
+def shift(p: Point) -> None:
+    p.y = 3  # FINDING: immutability (would raise FrozenInstanceError)
+
+
+def waived_retag(p: Point) -> None:
+    object.__setattr__(p, "y", 1)  # analysis: allow[immutability] test waiver

@@ -1,0 +1,61 @@
+"""Known-bad lock discipline, exercised by tests/test_analysis.py.
+
+Every violation below is intentional; the golden test asserts the
+lock-discipline pass reports exactly these findings (and honors the
+waiver).  This module is never imported by production code.
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.hits = 0  # guarded-by: self._lock
+        self.items = []  # guarded-by: self._lock
+        self.snapshot = None  # guarded-by: external[single-writer protocol]
+        self.notes = {}
+
+    def good(self):
+        with self._lock:
+            self.hits += 1
+            self.items.append(1)
+
+    def good_acquire_pairing(self):
+        self._lock.acquire()
+        self.hits += 1
+        self._lock.release()
+
+    def good_external(self):
+        self.snapshot = object()
+
+    def bad_plain(self):
+        self.hits = 5  # FINDING: guarded-by (plain assign, no lock)
+
+    def bad_aug(self):
+        self.hits += 1  # FINDING: guarded-by (compound +=, no lock)
+
+    def bad_mutator(self):
+        self.items.append(2)  # FINDING: guarded-by (mutator call, no lock)
+
+    def bad_subscript(self, wrong_lock):
+        with wrong_lock:
+            self.items[0] = 3  # FINDING: guarded-by (wrong lock held)
+
+    def bad_unannotated(self):
+        self.notes["k"] = 1  # FINDING: unannotated-shared-write
+
+    def waived_write(self):
+        self.hits = 0  # analysis: allow[guarded-by] deliberate test waiver
+
+
+class Helper:
+    """Caller-holds-lock convention: requires-lock seeds the held set."""
+
+    def __init__(self, counter: Counter):
+        self.counter = counter
+
+    def bump(self) -> None:  # requires-lock: self.counter._lock
+        self.counter.hits += 1
+
+    def bad_bump(self) -> None:
+        self.counter.hits += 1  # FINDING: guarded-by (cross-receiver)

@@ -1,0 +1,39 @@
+"""Known-bad lock ordering: a two-lock AB/BA inversion (direct) and a
+cycle closed through a call summary.  tests/test_analysis.py asserts the
+lock-order pass reports the cycle."""
+import threading
+
+
+class Inverted:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def backward(self):
+        with self._b:
+            with self._a:  # closes the cycle Inverted._a <-> Inverted._b
+                pass
+
+
+class ViaCall:
+    def __init__(self):
+        self._outer = threading.Lock()
+        self._inner = threading.Lock()
+
+    def take_outer(self):
+        with self._inner:
+            self.nested()  # summary: nested() acquires _outer under _inner
+
+    def nested(self):
+        with self._outer:
+            pass
+
+    def take_inner(self):
+        with self._outer:
+            with self._inner:
+                pass

@@ -1,0 +1,416 @@
+"""Concurrency invariant analysis plane: golden-finding tests over
+known-bad fixture modules, live-tree cleanliness, the extracted lock-order
+graph, the runtime sanitizer (including a deliberate lock inversion), and
+thread-safety regression storms for the canonicalizer fast paths the
+lock-discipline pass surfaced."""
+import os
+import threading
+import time
+from collections import Counter as TallyCounter
+
+import pytest
+
+from repro.analysis import annotations as anns
+from repro.analysis import immutability, lockcheck, lockorder, sanitizer
+from repro.analysis.cli import _default_paths, _repo_root, main as cli_main
+from repro.analysis.findings import load_baseline, split_baseline
+from repro.core import MemoizedNL
+from repro.core.sql_canon import SQLCanonicalizer
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "analysis_cases")
+
+
+def fixture_index():
+    return anns.build_index([FIXTURES], repo_root=FIXTURES)
+
+
+# ----------------------------------------------------- golden fixture runs
+
+
+class TestGoldenFindings:
+    def test_lock_discipline_findings(self):
+        findings, waived = lockcheck.run(fixture_index())
+        got = TallyCounter(
+            (f.rule, f.identifier) for f in findings
+            if f.file == "bad_guarded.py")
+        assert got == TallyCounter({
+            ("guarded-by", "Counter.hits"): 3,   # plain, +=, cross-receiver
+            ("guarded-by", "Counter.items"): 2,  # mutator, wrong-lock store
+            ("unannotated-shared-write", "Counter.notes"): 1,
+        })
+        lines = {f.identifier: f.line for f in findings
+                 if f.file == "bad_guarded.py"}
+        assert all(v > 0 for v in lines.values())
+        assert [w.identifier for w in waived
+                if w.file == "bad_guarded.py"] == ["Counter.hits"]
+
+    def test_guarded_write_under_lock_is_clean(self):
+        findings, _ = lockcheck.run(fixture_index())
+        flagged = {f"{f.file}:{f.line}" for f in findings}
+        src = open(os.path.join(FIXTURES, "bad_guarded.py")).read()
+        # the good_* methods must produce nothing
+        for marker in ("with self._lock", "good_acquire_pairing",
+                       "good_external"):
+            assert marker in src
+        bad_lines = {int(line.split(":")[1]) for line in flagged
+                     if line.startswith("bad_guarded.py")}
+        lines = src.splitlines()
+        for ln in bad_lines:
+            assert "FINDING" in lines[ln - 1]
+
+    def test_lock_order_cycles(self):
+        findings, _, edges = lockorder.run(fixture_index())
+        idents = sorted(f.identifier for f in findings)
+        assert idents == [
+            "cycle:Inverted._a -> Inverted._b -> Inverted._a",
+            "cycle:ViaCall._inner -> ViaCall._outer -> ViaCall._inner",
+        ]
+        # the via-call cycle needs the call-summary fixpoint: nested()'s
+        # acquisition of _outer must propagate to take_outer's call site
+        assert ("ViaCall._inner", "ViaCall._outer") in edges
+        assert "via ViaCall.nested" in edges[("ViaCall._inner",
+                                              "ViaCall._outer")]
+
+    def test_immutability_findings(self):
+        findings, waived = lockcheck.run(fixture_index())  # no frozen hits
+        assert not [f for f in findings if f.rule == "immutability"]
+        findings, waived = immutability.run(fixture_index())
+        got = sorted((f.rule, f.identifier) for f in findings)
+        assert got == [("immutability", "Point.x"),
+                       ("immutability", "Point.y")]
+        assert [w.identifier for w in waived] == ["Point.y"]
+
+
+# ------------------------------------------------------- live-tree checks
+
+
+class TestLiveTree:
+    def test_analysis_is_clean_beyond_baseline(self, capsys):
+        assert cli_main(["--strict", "--json", "-"]) == 0
+        out = capsys.readouterr().out
+        assert "clean: no findings beyond baseline" in out
+
+    def test_baseline_is_empty_by_policy(self):
+        path = os.path.join(_repo_root(), "src", "repro", "analysis",
+                            "baseline.json")
+        assert load_baseline(path) == set()
+
+    def test_split_baseline_keys_ignore_lines(self):
+        from repro.analysis.findings import Finding
+        f = Finding(rule="guarded-by", file="x.py", line=99,
+                    identifier="C.a", message="m")
+        new, old = split_baseline([f], {("guarded-by", "x.py", "C.a")})
+        assert new == [] and old == [f]
+
+    def test_live_lock_graph_shape(self):
+        root = _repo_root()
+        index = anns.build_index(_default_paths(root), repo_root=root)
+        findings, _, edges = lockorder.run(index)
+        assert findings == []  # acyclic
+        expected = {
+            ("CacheCluster._topology_lock", "CacheShard.lock"),
+            ("OlapExecutor._scan_mutex", "OlapExecutor._count_lock"),
+            ("OlapExecutor._subs_lock", "OlapExecutor._count_lock"),
+            ("ReadWriteGate.write", "CacheShard.lock"),
+        }
+        assert expected <= set(edges)
+
+    def test_guarded_annotations_cover_concurrent_classes(self):
+        root = _repo_root()
+        index = anns.build_index(_default_paths(root), repo_root=root)
+        guarded_by_class = {}
+        for mod in index.modules:
+            for cinfo in mod.classes.values():
+                if cinfo.guarded:
+                    guarded_by_class[cinfo.name] = set(cinfo.guarded)
+        assert "CacheShard" in guarded_by_class
+        assert "_inflight" in guarded_by_class["CacheShard"]
+        assert {"table", "error"} <= guarded_by_class["Flight"]
+        assert "_templates" in guarded_by_class["SQLCanonicalizer"]
+        assert "_memo" in guarded_by_class["MemoizedNL"]
+        assert "_tenants" in guarded_by_class["CacheService"]
+        assert "snapshot_id" in guarded_by_class["Tenant"]
+
+
+# ------------------------------------------------------- runtime sanitizer
+
+
+@pytest.fixture()
+def clean_sanitizer():
+    sanitizer.reset()
+    yield sanitizer
+    sanitizer.reset()
+
+
+class TestSanitizerUnit:
+    def test_make_lock_is_plain_when_disabled(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        lk = sanitizer.make_lock("T.lock")
+        assert not isinstance(lk, sanitizer.SanitizedLock)
+        with lk:
+            pass
+
+    def test_make_lock_is_sanitized_when_enabled(self, monkeypatch,
+                                                 clean_sanitizer):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        lk = sanitizer.make_lock("T.lock")
+        assert isinstance(lk, sanitizer.SanitizedLock)
+        with lk:
+            assert lk.locked()
+        assert not lk.locked()
+
+    def test_deliberate_inversion_is_caught(self, clean_sanitizer):
+        a = sanitizer.SanitizedLock("T.a")
+        b = sanitizer.SanitizedLock("T.b")
+        with a:
+            with b:
+                pass
+        with b:
+            with pytest.raises(sanitizer.LockOrderViolation):
+                a.acquire()
+        assert sanitizer.violations()
+        assert "T.b" in sanitizer.observed_edges()["T.a"]
+
+    def test_inversion_caught_across_threads(self, clean_sanitizer):
+        a = sanitizer.SanitizedLock("X.a")
+        b = sanitizer.SanitizedLock("X.b")
+
+        def fwd():
+            with a:
+                with b:
+                    pass
+
+        t = threading.Thread(target=fwd)
+        t.start()
+        t.join()
+
+        raised = []
+
+        def bwd():
+            with b:
+                try:
+                    with a:  # demonstrated opposite order: must raise
+                        pass
+                except sanitizer.LockOrderViolation as e:
+                    raised.append(e)
+
+        t2 = threading.Thread(target=bwd)
+        t2.start()
+        t2.join()
+        assert raised
+        assert any("lock-order cycle" in v for v in sanitizer.violations())
+
+    def test_reentrant_same_instance_is_fine(self, clean_sanitizer):
+        lk = sanitizer.SanitizedLock("T.re", reentrant=True)
+        with lk:
+            with lk:
+                pass
+        assert sanitizer.violations() == []
+
+    def test_same_class_nesting_needs_registration(self, clean_sanitizer):
+        a1 = sanitizer.SanitizedLock("Shardish.lock")
+        a2 = sanitizer.SanitizedLock("Shardish.lock")
+        with a1:
+            with pytest.raises(sanitizer.LockOrderViolation):
+                a2.acquire()
+        sanitizer.reset()
+        sanitizer.allow_same_class_order("Shardish.lock")
+        with a1:
+            with a2:
+                pass
+        assert sanitizer.violations() == []
+
+    def test_note_blocking_flags_held_lock(self, monkeypatch,
+                                           clean_sanitizer):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        lk = sanitizer.SanitizedLock("T.lock")
+        sanitizer.note_blocking("free")  # nothing held: fine
+        with lk:
+            with pytest.raises(sanitizer.LockOrderViolation):
+                sanitizer.note_blocking("Flight.wait")
+        assert any("Flight.wait" in v for v in sanitizer.violations())
+
+    def test_note_blocking_ignores_shared_pseudo(self, monkeypatch,
+                                                 clean_sanitizer):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        token = sanitizer.note_acquire("Gate.read", shared=True)
+        try:
+            sanitizer.note_blocking("Flight.wait")  # shared: no violation
+        finally:
+            sanitizer.note_release(token)
+        assert sanitizer.violations() == []
+
+    def test_pseudo_lock_participates_in_ordering(self, monkeypatch,
+                                                  clean_sanitizer):
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        lk = sanitizer.SanitizedLock("T.inner")
+        token = sanitizer.note_acquire("Gate.write")
+        with lk:
+            pass
+        sanitizer.note_release(token)
+        assert "T.inner" in sanitizer.observed_edges()["Gate.write"]
+        with lk:
+            with pytest.raises(sanitizer.LockOrderViolation):
+                sanitizer.note_acquire("Gate.write")
+
+
+# ------------------------------- canonicalizer thread-safety regressions
+
+
+class TestCanonicalizerConcurrency:
+    """Regressions for the unguarded shared state the lock-discipline pass
+    surfaced: the SQL template/text memos + counters, per-parse resolution
+    state on the shared canonicalizer, and the NL memo."""
+
+    N_THREADS = 8
+    ROUNDS = 24
+
+    def _sqls(self):
+        joins = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+                 "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+        out = []
+        for y in (1992, 1993, 1994, 1995):
+            out.append(f"SELECT c_region, SUM(lo_revenue) AS r FROM lineorder "
+                       f"{joins}WHERE d_year = {y} GROUP BY c_region")
+        for r in ("'ASIA'", "'AMERICA'"):
+            out.append(f"SELECT c_nation, COUNT(*) AS n FROM lineorder "
+                       f"{joins}WHERE c_region = {r} GROUP BY c_nation")
+        return out
+
+    def test_sql_canonicalizer_storm(self, ssb_small):
+        canon = SQLCanonicalizer(ssb_small.schema, max_templates=2,
+                                 max_bindings_per_template=4)
+        cold = SQLCanonicalizer(ssb_small.schema, template_cache=False)
+        sqls = self._sqls()
+        expected = {s: cold.canonicalize(s) for s in sqls}
+        errors = []
+        barrier = threading.Barrier(self.N_THREADS)
+
+        def worker(tid):
+            barrier.wait()
+            try:
+                for i in range(self.ROUNDS):
+                    s = sqls[(tid + i) % len(sqls)]
+                    assert canon.canonicalize(s) == expected[s]
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        st = canon.template_stats()
+        arrivals = self.N_THREADS * self.ROUNDS
+        # every arrival resolves through exactly one tier
+        assert (st["text_hits"] + st["template_hits"]
+                + st["template_misses"]) == arrivals
+        assert st["templates"] <= 2
+        assert st["bindings"] <= 2 * 4
+
+    def test_from_ast_state_is_parse_scoped(self, ssb_small):
+        """Two interleaved from_ast calls with different alias maps must not
+        cross-contaminate (the old instance-attribute state did)."""
+        canon = SQLCanonicalizer(ssb_small.schema, template_cache=False)
+        sqls = self._sqls()
+        expected = {s: canon.canonicalize(s) for s in sqls}
+        errors = []
+
+        def worker(tid):
+            try:
+                for i in range(self.ROUNDS):
+                    s = sqls[(tid + i) % len(sqls)]
+                    assert canon.canonicalize(s) == expected[s]
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+
+    def test_memoized_nl_storm(self):
+        class CountingInner:
+            def __init__(self):
+                self.calls = 0
+                self._lock = threading.Lock()
+
+            def canonicalize(self, text, now=None):
+                with self._lock:
+                    self.calls += 1
+                time.sleep(0.001)  # widen the race window
+                return ("sig", text)
+
+        inner = CountingInner()
+        memo = MemoizedNL(inner)
+        texts = [f"revenue by region in {y}" for y in range(1992, 1996)]
+        errors = []
+        barrier = threading.Barrier(self.N_THREADS)
+
+        def worker(tid):
+            barrier.wait()
+            try:
+                for i in range(self.ROUNDS):
+                    t = texts[(tid + i) % len(texts)]
+                    assert memo.canonicalize(t) == ("sig", t)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        arrivals = self.N_THREADS * self.ROUNDS
+        # each arrival is exactly one of: memo hit, inner call
+        assert memo.calls + memo.memo_hits == arrivals
+        # post-storm, every text is memoized to one canonical result object
+        for t in texts:
+            assert memo.canonicalize(t) is memo.canonicalize(t)
+
+    def test_memoized_nl_batch_concurrent(self):
+        class BatchInner:
+            def __init__(self):
+                self.batch_calls = 0
+                self._lock = threading.Lock()
+
+            def canonicalize(self, text, now=None):
+                return ("sig", text)
+
+            def canonicalize_batch(self, texts, now=None):
+                with self._lock:
+                    self.batch_calls += 1
+                time.sleep(0.001)
+                return [("sig", t) for t in texts]
+
+        inner = BatchInner()
+        memo = MemoizedNL(inner)
+        texts = [f"q{i}" for i in range(6)]
+        errors = []
+        barrier = threading.Barrier(4)
+
+        def worker(tid):
+            barrier.wait()
+            try:
+                for _ in range(10):
+                    out = memo.canonicalize_batch(texts)
+                    assert out == [("sig", t) for t in texts]
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        assert memo.calls + memo.memo_hits == 4 * 10 * len(texts)

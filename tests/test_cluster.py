@@ -576,3 +576,104 @@ class TestTenantStatsConcurrency:
         # every request was served: hits + misses + coalesced add up
         cs = t.cache.stats
         assert cs.lookups + t.stats.coalesced_misses >= n_threads * per_thread
+
+
+# ---------------------------------------------------- runtime lock sanitizer
+
+
+class TestSanitizer:
+    """Re-run the heaviest concurrency paths with REPRO_SANITIZE=1: every
+    make_lock becomes a SanitizedLock that records acquisition order and
+    raises on a demonstrated inversion or a blocking wait under a held lock.
+    Services must be constructed *inside* the fixture scope — make_lock
+    checks the env at call time."""
+
+    @pytest.fixture()
+    def sanitized(self, monkeypatch):
+        from repro.analysis import sanitizer
+        sanitizer.reset()
+        monkeypatch.setenv(sanitizer.ENV_FLAG, "1")
+        yield sanitizer
+        sanitizer.reset()
+
+    def test_single_flight_storm_sanitized(self, ssb_small, sanitized):
+        """The flight-wait path holds only the shared read gate (never a
+        shard lock) while blocking on the leader — the sanitizer proves it."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.05)
+        svc = CacheService()
+        svc.register_tenant("t", schema=ssb_small.schema, backend=be,
+                            shards=4)
+        sql = sql_region("SUM(lo_revenue) AS r")
+        n = 8
+        results = [None] * n
+        errors = [None] * n
+        barrier = threading.Barrier(n)
+
+        def worker(i):
+            barrier.wait()
+            try:
+                results[i] = svc.submit(QueryRequest(sql=sql, tenant="t"))
+            except Exception as e:  # noqa: BLE001
+                errors[i] = e
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == [None] * n
+        assert be.calls == 1
+        assert sanitized.violations() == []
+        # at least one real edge was observed under load
+        assert sanitized.observed_edges()
+
+    def test_mixed_traffic_and_refresh_sanitized(self, ssb_small, sanitized):
+        """Mixed hit/miss traffic racing a snapshot advance: the write gate
+        nests over shard locks in one consistent order, no violations."""
+        svc = mk_service(ssb_small, shards=4)
+        sqls = [sql_region("SUM(lo_revenue) AS r", f"d_year = {y}")
+                for y in (1992, 1993, 1994, 1995)]
+        errors = []
+
+        def worker(tid):
+            try:
+                for i in range(8):
+                    r = svc.submit(QueryRequest(
+                        sql=sqls[(tid + i) % len(sqls)], tenant="t"))
+                    assert r.status in ("miss", "hit_exact")
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(6)]
+        for t in threads:
+            t.start()
+        time.sleep(0.01)
+        svc.advance_snapshot("t", snapshot_id="s2", refresh=False)
+        for t in threads:
+            t.join()
+        assert errors == []
+        assert sanitized.violations() == []
+        edges = sanitized.observed_edges()
+        held = set(edges) | {b for bs in edges.values() for b in bs}
+        assert "CacheShard.lock" in held
+
+    def test_rebalance_under_sanitizer(self, ssb_small, canon, backend,
+                                       sanitized):
+        """set_shards acquires every shard lock (in index order) under the
+        topology lock — legal only because CacheShard.lock is registered
+        self-ordered; the sanitizer accepts it and records the edge."""
+        cluster = mk_cluster(ssb_small, 4)
+        for y in (1992, 1993, 1994, 1995):
+            sig = canon.canonicalize(
+                sql_region("SUM(lo_revenue) AS r", f"d_year = {y}"))
+            cluster.put(sig, backend.execute(sig))
+        n_before = len(cluster)
+        cluster.set_shards(2)
+        cluster.set_shards(4)
+        assert len(cluster) == n_before
+        assert sanitized.violations() == []
+        assert "CacheShard.lock" in sanitized.observed_edges().get(
+            "CacheCluster._topology_lock", set())
