@@ -47,6 +47,10 @@ EXTERNAL_CLASSES = {
                      "mutation runs inside CacheShard.lock (_shard_op)",
     "CacheStats": "owned by a SemanticCache (same shard lock) or by "
                   "CacheCluster._retired_stats under _topology_lock",
+    "ColdTier": "owned by exactly one TieredStore; every call runs under "
+                "TieredStore._lock (write_payload targets unique tmp names)",
+    "DurableManifest": "owned by exactly one ColdTier; serialized by the "
+                       "owning TieredStore._lock",
 }
 
 #: (class, attr) pairs that are deliberate benign races: idempotent memos
@@ -73,6 +77,7 @@ TYPE_HINTS = {
     "flight": "Flight",
     "fl": "Flight",
     "cluster": "CacheCluster",
+    "store": "TieredStore",
 }
 
 #: ReadWriteGate attributes that act as ordering pseudo-locks (held across

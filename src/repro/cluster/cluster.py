@@ -99,6 +99,11 @@ class CacheCluster:
         single_flight: bool = True,
         flight_timeout: float = DEFAULT_FLIGHT_TIMEOUT_S,
         concurrent_misses: bool = True,
+        policy: Optional[str] = None,  # 'lru' | 'cost' | None = auto
+        cold_capacity_bytes: Optional[int] = None,  # TOTAL cold budget, split
+        ttl_s: Optional[float] = None,
+        hit_half_life_s: Optional[float] = None,
+        write_through: bool = False,
     ):
         if shards < 1:
             raise ValueError(f"cluster needs >= 1 shard, got {shards}")
@@ -112,6 +117,14 @@ class CacheCluster:
         self.indexed_probes = indexed_probes
         self.single_flight = single_flight
         self.flight_timeout = flight_timeout
+        self.policy = policy
+        self.cold_capacity_bytes = cold_capacity_bytes
+        self.ttl_s = ttl_s
+        self.hit_half_life_s = hit_half_life_s
+        self.write_through = write_through  # guarded-by: self._topology_lock
+        # one shared TieredStore per tenant/cluster; bound by attach_store
+        # under the topology lock, read by _new_cache (same lock)
+        self._store = None  # guarded-by: self._topology_lock
         # advisory to the miss planner: per-shard miss groups may execute
         # concurrently (the backend's plan memos are idempotent)
         self.concurrent_misses = concurrent_misses
@@ -141,9 +154,17 @@ class CacheCluster:
             enable_filterdown=cache.enable_filterdown,
             enable_compose=cache.enable_compose,
             level_mapper=cache.level_mapper,
-            indexed_probes=cache.indexed_probes, **kw)
+            indexed_probes=cache.indexed_probes,
+            policy=cache.policy,
+            cold_capacity_bytes=cache.cold_capacity_bytes,
+            ttl_s=cache.ttl_s,
+            hit_half_life_s=cache.hit_half_life_s,
+            write_through=cache.write_through, **kw)
 
     def _new_cache(self, n_shards: int) -> SemanticCache:
+        kw = {}
+        if self.hit_half_life_s is not None:
+            kw["hit_half_life_s"] = self.hit_half_life_s
         return SemanticCache(
             self.schema,
             capacity=self._split(self.capacity, n_shards),
@@ -153,6 +174,12 @@ class CacheCluster:
             level_mapper=self.level_mapper,
             indexed_probes=self.indexed_probes,
             capacity_bytes=self._split(self.capacity_bytes, n_shards),
+            policy=self.policy,
+            store=self._store,
+            cold_capacity_bytes=self._split(self.cold_capacity_bytes, n_shards),
+            ttl_s=self.ttl_s,
+            write_through=self.write_through,
+            **kw,
         )
 
     @staticmethod
@@ -271,9 +298,11 @@ class CacheCluster:
 
     # -------------------------------------------------------------- mutation
     def put(self, sig: Signature, table: ResultTable, origin: str = "sql",
-            snapshot_id: str = "snap0") -> str:
+            snapshot_id: str = "snap0", *, cost_ms: float = 0.0,
+            ttl_s: Optional[float] = None) -> str:
         return self._shard_op(
-            sig, lambda shard: shard.put(sig, table, origin, snapshot_id))
+            sig, lambda shard: shard.put(sig, table, origin, snapshot_id,
+                                         cost_ms=cost_ms, ttl_s=ttl_s))
 
     def drop(self, key: str) -> bool:
         shard = self._shard_of_key(key)
@@ -285,6 +314,76 @@ class CacheCluster:
         if shard is None:
             raise KeyError(f"cannot refresh unknown entry {key!r}")
         shard.refresh_entry(key, table, snapshot_id, merged)
+
+    def ensure_loaded(self, key: str) -> Optional[CacheEntry]:
+        shard = self._shard_of_key(key)
+        return shard.ensure_loaded(key) if shard is not None else None
+
+    # ------------------------------------------------------- store lifecycle
+    @property
+    def store(self):
+        return self._store
+
+    def attach_store(self, store, entries: Sequence[CacheEntry] = (),
+                     write_through: Optional[bool] = None) -> int:
+        """Attach one shared cold-tier store to every shard and route the
+        replayed cold metas to their owning shards by family hash (the same
+        deterministic modulus as live traffic, so warm-restarted entries land
+        exactly where lookups will probe for them)."""
+        adopted = 0
+        with self._topology_lock:
+            self._store = store
+            if write_through is not None:
+                self.write_through = write_through
+            shards = self._shards
+            n = len(shards)
+            groups: dict[int, list[CacheEntry]] = {i: [] for i in range(n)}
+            for e in entries:
+                groups[family_hash(e.signature) % n].append(e)
+            for i, shard in enumerate(shards):
+                with shard.lock:
+                    adopted += shard.cache.attach_store(
+                        store, groups[i], write_through=write_through)
+        return adopted
+
+    def detach_store(self) -> None:
+        with self._topology_lock:
+            self._store = None
+            for shard in self._shards:
+                with shard.lock:
+                    shard.cache.detach_store()
+
+    def persist_hot(self) -> int:
+        n = 0
+        for shard in self._shards:
+            with shard.lock:
+                n += shard.cache.persist_hot()
+        return n
+
+    def tier_stats(self) -> dict:
+        """Aggregated per-tier gauges/counters; the shared store's own stats
+        are reported once (every shard sees the same engine)."""
+        agg = {"hot_entries": 0, "cold_entries": 0, "hot_bytes": 0,
+               "cold_bytes": 0, "promotions": 0, "demotions": 0,
+               "cold_drops": 0, "ttl_expiries": 0, "policy": None,
+               "store": None}
+        for shard in self._shards:
+            ts = shard.tier_stats()
+            for k in ("hot_entries", "cold_entries", "hot_bytes", "cold_bytes",
+                      "promotions", "demotions", "cold_drops", "ttl_expiries"):
+                agg[k] += ts[k]
+            agg["policy"] = ts["policy"]
+        if self._store is not None:
+            agg["store"] = self._store.stats()
+        return agg
+
+    def entries_summary(self, limit: int = 256) -> list[dict]:
+        out: list[dict] = []
+        for shard in self._shards:
+            if len(out) >= limit:
+                break
+            out.extend(shard.entries_summary(limit - len(out)))
+        return out
 
     # ------------------------------------------------------------- broadcast
     def affected_keys(self, updated_start: Optional[str] = None,
@@ -339,10 +438,11 @@ class CacheCluster:
                                  for i in range(len(old), n)]
                 for shard in old[n:]:  # fold removed shards' counters
                     folded = dataclasses.replace(shard.cache.stats)
-                    # bytes_cached is a gauge, not a counter: the removed
-                    # shard's entries migrate to survivors, whose own gauges
-                    # will account for them
+                    # bytes_cached/bytes_cold are gauges, not counters: the
+                    # removed shard's entries migrate to survivors, whose own
+                    # gauges will account for them
                     folded.bytes_cached = 0
+                    folded.bytes_cold = 0
                     self._retired_stats = _sum_stats(
                         [self._retired_stats, folded])
                 assign: dict[int, list[CacheEntry]] = {i: [] for i in range(n)}

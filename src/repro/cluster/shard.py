@@ -86,9 +86,11 @@ class CacheShard:
 
     # ------------------------------------------------------------- mutation
     def put(self, sig: Signature, table: ResultTable, origin: str = "sql",
-            snapshot_id: str = "snap0") -> str:
+            snapshot_id: str = "snap0", *, cost_ms: float = 0.0,
+            ttl_s: Optional[float] = None) -> str:
         with self.lock:
-            return self.cache.put(sig, table, origin, snapshot_id)
+            return self.cache.put(sig, table, origin, snapshot_id,
+                                  cost_ms=cost_ms, ttl_s=ttl_s)
 
     def drop(self, key: str) -> bool:
         with self.lock:
@@ -108,10 +110,17 @@ class CacheShard:
         with self.lock:
             return self.cache.invalidate_schema_change()
 
+    def ensure_loaded(self, key: str) -> Optional[CacheEntry]:
+        """Entry with its table resident, promoting from the cold tier if
+        demoted (refresh merges need the actual table)."""
+        with self.lock:
+            return self.cache.ensure_loaded(key)
+
     # -------------------------------------------------------- introspection
     def contains(self, key: str) -> bool:
         with self.lock:
-            return key in self.cache._entries
+            return (key in self.cache._entries
+                    or key in self.cache._cold)
 
     def entry(self, key: str) -> Optional[CacheEntry]:
         with self.lock:
@@ -133,3 +142,11 @@ class CacheShard:
     def total_bytes(self) -> int:
         with self.lock:
             return self.cache.total_bytes()
+
+    def tier_stats(self) -> dict:
+        with self.lock:
+            return self.cache.tier_stats()
+
+    def entries_summary(self, limit: int = 256) -> list[dict]:
+        with self.lock:
+            return self.cache.entries_summary(limit)

@@ -282,6 +282,9 @@ def _apply_lookup(tenant: "Tenant", s: RequestState, lr: LookupResult) -> None:
             # original hit, so this executes directly in the plan stage)
             lr = LookupResult("miss", None)
     s.provenance.append(f"lookup:{lr.status}")
+    if getattr(lr, "tier", None) == "cold":
+        # served by a cold-tier promotion: same table, different tier
+        s.provenance.append("tier:cold")
     if lr.status != "miss":
         s.status = lr.status
         s.table = lr.table
@@ -481,7 +484,10 @@ def _store_state(tenant: "Tenant", s: RequestState) -> None:
     t0 = time.perf_counter()
     tenant.cache.put(s.sig, s.table,
                      origin="nl" if s.origin == "nl" else "sql",
-                     snapshot_id=tenant.snapshot_id)
+                     snapshot_id=tenant.snapshot_id,
+                     # recompute-cost estimate for the cost-benefit eviction
+                     # policy: what this entry's miss actually paid to execute
+                     cost_ms=s.timings.get("execute", 0.0))
     s.add_ms("store", (time.perf_counter() - t0) * 1e3)
     s.stored = True
     tenant.stats.bump(stores=1)

@@ -82,6 +82,10 @@ class CacheService:
         # on _reg_lock; reads are lock-free dict probes (GIL-atomic)
         self._tenants: dict[str, Tenant] = {}  # guarded-by: self._reg_lock
         self._reg_lock = make_lock("CacheService._reg_lock")
+        # warm-restart root directory (one store subdir per tenant); set by
+        # open(), cleared by close(); reads are lock-free like _tenants
+        self._store_path: Optional[str] = None  # guarded-by: self._reg_lock
+        self._write_through = True  # guarded-by: self._reg_lock
 
     # ----------------------------------------------------------- tenants
     def register_tenant(
@@ -133,6 +137,10 @@ class CacheService:
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered")
             self._tenants[name] = t
+        if self._store_path is not None:
+            # the service is open for warm restart: give the new tenant its
+            # cold tier right away (replays any prior run's entries)
+            self._attach_store(t)
         return t
 
     def tenant(self, name: str = DEFAULT_TENANT) -> Tenant:
@@ -144,6 +152,60 @@ class CacheService:
 
     def tenants(self) -> list[str]:
         return sorted(self._tenants)
+
+    # ------------------------------------------------------- warm restart
+    def open(self, path: str, *, write_through: bool = True) -> dict:
+        """Open the service's durable store root: every registered tenant
+        (and every tenant registered later) gets a tiered cold store under
+        ``<path>/<tenant>/``, replaying whatever a previous run persisted —
+        the warm-restart half of the ``open``/``close`` lifecycle.  With
+        ``write_through`` (default) stores/refreshes also spill write-behind,
+        so a kill loses at most the in-flight spill window, not the working
+        set.  Returns ``{tenant: adopted_entry_count}``."""
+        import os
+
+        with self._reg_lock:
+            self._store_path = os.path.abspath(path)
+            self._write_through = write_through
+            tenants = list(self._tenants.values())
+        return {t.name: self._attach_store(t) for t in tenants}
+
+    def close(self) -> dict:
+        """Graceful shutdown of the durable store: spill every hot entry
+        (incremental — clean versions cost a metadata record), drain the
+        write-behind queue, compact the manifest, and detach.  Returns
+        ``{tenant: persisted_entry_count}``."""
+        with self._reg_lock:
+            self._store_path = None
+            tenants = list(self._tenants.values())
+        out = {}
+        for t in tenants:
+            store = getattr(t.cache, "store", None)
+            if store is None:
+                out[t.name] = 0
+                continue
+            with t.gate.write:  # exclusive: no request mid-pipeline
+                out[t.name] = t.cache.persist_hot()
+                t.cache.detach_store()
+            store.flush()
+            store.close()
+        return out
+
+    def _attach_store(self, t: Tenant) -> int:
+        """Build + replay this tenant's tiered store and attach it."""
+        import os
+
+        from ..storage.engine import TieredStore
+
+        root = self._store_path
+        if root is None:
+            return 0
+        store = TieredStore(os.path.join(root, t.name))
+        entries = store.open()
+        with t.gate.write:
+            return t.cache.attach_store(
+                store, entries,
+                write_through=getattr(self, "_write_through", True))
 
     # ----------------------------------------------------------- requests
     def submit(self, request: QueryRequest) -> QueryResult:
@@ -288,13 +350,17 @@ class CacheService:
         # snapshot the affected entries once: under the sharded cluster,
         # concurrent request threads can evict (or a rebalance can migrate) a
         # key between affected_keys() and this loop — a vanished entry simply
-        # no longer needs refreshing
-        mergeable, fallback = [], []  # lists of (key, entry)
+        # no longer needs refreshing.  ensure_loaded promotes demoted (cold-
+        # tier) entries so the merge below has the actual table; the table is
+        # captured here because a later eviction could demote it again.
+        loader = getattr(t.cache, "ensure_loaded", t.cache.entry)
+        mergeable, fallback = [], []  # lists of (key, entry, table)
         for k in affected:
-            e = t.cache.entry(k)
-            if e is None:
+            e = loader(k)
+            if e is None or e.table is None:
                 continue
-            (mergeable if refreshable(e.signature) else fallback).append((k, e))
+            (mergeable if refreshable(e.signature)
+             else fallback).append((k, e, e.table))
 
         def try_refresh(key, table, merged):
             try:
@@ -304,27 +370,27 @@ class CacheService:
                 return 0
 
         if mergeable:
-            sigs = [e.signature for _, e in mergeable]
+            sigs = [e.signature for _, e, _ in mergeable]
             rows0 = getattr(t.backend, "rows_scanned", 0)
             deltas = t.backend.execute_batch(
                 sigs, partition=(part.start_row, part.end_row))
             rep.delta_rows_scanned = getattr(t.backend, "rows_scanned", 0) - rows0
             t.stats.bump(backend_executions=len(sigs))
-            for (key, e), sig, dtab in zip(mergeable, sigs, deltas):
-                merged = merge_tables(sig, e.table, dtab)
+            for (key, e, base), sig, dtab in zip(mergeable, sigs, deltas):
+                merged = merge_tables(sig, base, dtab)
                 rep.refreshed += try_refresh(key, merged, True)
         if fallback:
             if recompute_fallbacks:
-                sigs = [e.signature for _, e in fallback]
+                sigs = [e.signature for _, e, _ in fallback]
                 rows0 = getattr(t.backend, "rows_scanned", 0)
                 tables = t.backend.execute_batch(sigs)
                 rep.recompute_rows_scanned = \
                     getattr(t.backend, "rows_scanned", 0) - rows0
                 t.stats.bump(backend_executions=len(sigs))
-                for (key, _), table in zip(fallback, tables):
+                for (key, _, _), table in zip(fallback, tables):
                     rep.recomputed += try_refresh(key, table, False)
             else:
-                for key, _ in fallback:
+                for key, _, _ in fallback:
                     t.cache.drop(key)
                 rep.dropped = len(fallback)
         return rep
@@ -341,11 +407,15 @@ class CacheService:
         return t.cache.invalidate_snapshot(updated_start, updated_end)
 
     # -------------------------------------------------------------- stats
-    def stats(self, tenant: Optional[str] = None) -> dict:
+    def stats(self, tenant: Optional[str] = None, *,
+              include_entries: bool = False) -> dict:
         """Structured stats: per-tenant service counters (including per-stage
         p50/p95 pipeline latency), cache counters (including derivation
-        candidates-scanned vs plans-attempted), and the request-plane
-        front-end counters (SQL template cache, NL memo)."""
+        candidates-scanned vs plans-attempted), per-tier storage gauges
+        (hot/cold bytes, promotions, demotions, spill queue depth), and the
+        request-plane front-end counters (SQL template cache, NL memo).
+        ``include_entries`` adds a capped per-entry summary (age, decayed
+        hits, cost, policy score) so eviction inputs are observable."""
         if tenant is not None:
             t = self.tenant(tenant)
             d = {"service": t.stats.to_dict(), "cache": t.cache.stats.to_dict(),
@@ -353,6 +423,14 @@ class CacheService:
             if t.nl is not None and hasattr(t.nl, "memo_hits"):
                 d["frontend"]["nl_memo"] = {
                     "calls": t.nl.calls, "memo_hits": t.nl.memo_hits}
+            if hasattr(t.cache, "tier_stats"):
+                ts = t.cache.tier_stats()
+                store = ts.get("store")
+                d["tiers"] = ts
+                d["tiers"]["spill_queue_depth"] = (
+                    store["spill_queue_depth"] if store else 0)
+            if include_entries and hasattr(t.cache, "entries_summary"):
+                d["entries"] = t.cache.entries_summary()
             if hasattr(t.cache, "stats_by_shard"):
                 d["cluster"] = t.cache.describe()
                 d["cluster"]["by_shard"] = t.cache.stats_by_shard()
@@ -361,4 +439,5 @@ class CacheService:
                 # accounting when the partition-parallel scan plane is active
                 d["backend"] = t.backend.stats()
             return d
-        return {name: self.stats(name) for name in self.tenants()}
+        return {name: self.stats(name, include_entries=include_entries)
+                for name in self.tenants()}

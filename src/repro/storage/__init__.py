@@ -1,0 +1,43 @@
+"""Tiered durable cache storage (PR 8).
+
+A hot (RAM) / cold (disk) hierarchy behind :class:`repro.core.cache.SemanticCache`:
+
+* :mod:`repro.storage.manifest` — crash-safe record log: an atomic-rename
+  checkpoint (``manifest.json``, the PR 3 format) plus an fsync'd append-only
+  CRC-framed WAL (``manifest.log``) that is replayable after a kill at any
+  byte offset.
+* :mod:`repro.storage.coldstore` — the cold tier proper: per-entry ``.npz``
+  payloads written tmp+fsync+rename with sha256/size framing, orphan cleanup
+  on replay.
+* :mod:`repro.storage.policy` — cost-benefit admission/eviction scoring
+  (recompute-cost x decayed hit-count / bytes) with plain LRU kept as the
+  differential oracle.
+* :mod:`repro.storage.engine` — :class:`TieredStore`, the write-behind spill
+  engine (async worker thread, locks via the PR 7 sanitizer factory).
+
+This ``__init__`` stays import-light: ``repro.core.cache`` imports
+``repro.storage.policy`` at module scope, and the engine imports
+``repro.core.cache`` — the package root must not force the cycle.
+"""
+from __future__ import annotations
+
+__all__ = ["TieredStore", "ColdTier", "DurableManifest",
+           "LruPolicy", "CostPolicy", "make_policy",
+           "decayed_hits", "cost_benefit_score"]
+
+
+def __getattr__(name):  # lazy: avoid core.cache <-> storage import cycle
+    if name == "TieredStore":
+        from .engine import TieredStore
+        return TieredStore
+    if name in ("ColdTier",):
+        from .coldstore import ColdTier
+        return ColdTier
+    if name in ("DurableManifest",):
+        from .manifest import DurableManifest
+        return DurableManifest
+    if name in ("LruPolicy", "CostPolicy", "make_policy", "decayed_hits",
+                "cost_benefit_score"):
+        from . import policy as _p
+        return getattr(_p, name)
+    raise AttributeError(f"module 'repro.storage' has no attribute {name!r}")

@@ -1,0 +1,666 @@
+"""Tiered durable store: manifest crash-safety, cold-tier payload
+verification, cost-aware admission, warm restart, and the differential
+oracle (a tiered cache must serve bit-identical results to an all-hot one,
+modulo the ``tier:cold`` provenance tag — including across a kill/restart).
+"""
+import json
+import os
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import SemanticCache
+from repro.core.cache import load_cache, save_cache
+from repro.core.sql_canon import SQLCanonicalizer
+from repro.core.table import ResultTable
+from repro.olap.executor import OlapExecutor
+from repro.storage import policy as storage_policy
+from repro.storage.coldstore import ColdTier, payload_name
+from repro.storage.engine import TieredStore, entry_meta
+from repro.storage.manifest import DurableManifest
+
+JOINS = ("JOIN dates ON lineorder.lo_orderdate = dates.d_key "
+         "JOIN customer ON lineorder.lo_custkey = customer.c_key ")
+
+
+def q(where="d_year = 1994", group="c_region"):
+    return (f"SELECT {group}, SUM(lo_revenue) AS r, COUNT(*) AS n "
+            f"FROM lineorder {JOINS}WHERE {where} GROUP BY {group}")
+
+
+@pytest.fixture(scope="module")
+def env(ssb_small):
+    canon = SQLCanonicalizer(ssb_small.schema)
+    backend = OlapExecutor(ssb_small.dataset, impl="numpy")
+    return ssb_small, canon, backend
+
+
+def fresh_cache(wl, **kw):
+    return SemanticCache(wl.schema, level_mapper=wl.dataset.level_mapper(), **kw)
+
+
+def year_queries(canon, backend, years=(1992, 1993, 1994, 1995, 1996, 1997)):
+    sigs = [canon.canonicalize(q(f"d_year = {y}")) for y in years]
+    return [(s, backend.execute(s)) for s in sigs]
+
+
+# --------------------------------------------------------------- manifest
+
+
+class TestManifest:
+    def test_wal_roundtrip_put_meta_del(self, tmp_path):
+        m = DurableManifest(str(tmp_path))
+        m.append({"key": "a", "v": 1})
+        m.append({"key": "b", "v": 2})
+        m.append({"key": "a", "op": "meta", "hits": 7, "lru_stamp": 99})
+        m.append({"key": "b", "op": "del"})
+        m.close()
+        records, report = DurableManifest(str(tmp_path)).replay()
+        assert set(records) == {"a"}
+        assert records["a"]["hits"] == 7 and records["a"]["lru_stamp"] == 99
+        assert report["tombstones"] == 1 and report["torn_records"] == 0
+
+    def test_torn_tail_and_crc_corruption_skipped(self, tmp_path):
+        m = DurableManifest(str(tmp_path))
+        m.append({"key": "a", "v": 1})
+        m.append({"key": "b", "v": 2})
+        m.close()
+        log = tmp_path / "manifest.log"
+        lines = log.read_bytes().splitlines(keepends=True)
+        # corrupt record b's payload without touching its crc frame
+        lines[1] = lines[1].replace(b'"v":2', b'"v":3')
+        # and simulate a kill mid-append: torn half record at the tail
+        log.write_bytes(b"".join(lines) + b'{"key":"c","op":"pu')
+        records, report = DurableManifest(str(tmp_path)).replay()
+        assert set(records) == {"a"}
+        assert report["torn_records"] == 2
+
+    def test_orphan_meta_is_not_a_record(self, tmp_path):
+        m = DurableManifest(str(tmp_path))
+        m.append({"key": "ghost", "op": "meta", "hits": 3})
+        m.close()
+        records, report = DurableManifest(str(tmp_path)).replay()
+        assert records == {} and report["orphan_meta"] == 1
+
+    def test_checkpoint_truncates_log_and_replays_identically(self, tmp_path):
+        m = DurableManifest(str(tmp_path))
+        m.append({"key": "a", "v": 1})
+        m.append({"key": "b", "v": 2})
+        before, _ = DurableManifest(str(tmp_path)).replay()
+        m.checkpoint(before.values())
+        m.close()
+        assert (tmp_path / "manifest.log").read_bytes() == b""
+        after, report = DurableManifest(str(tmp_path)).replay()
+        assert after == before
+        assert report["checkpoint_records"] == 2 and report["log_records"] == 0
+
+    def test_crash_between_checkpoint_and_truncate_is_idempotent(self, tmp_path):
+        m = DurableManifest(str(tmp_path))
+        m.append({"key": "a", "v": 1})
+        m.close()
+        records, _ = DurableManifest(str(tmp_path)).replay()
+        # checkpoint written but the log truncation "lost to a crash":
+        # re-append the pre-checkpoint log contents after checkpointing
+        log_bytes = (tmp_path / "manifest.log").read_bytes()
+        m2 = DurableManifest(str(tmp_path))
+        m2.checkpoint(records.values())
+        m2.close()
+        (tmp_path / "manifest.log").write_bytes(log_bytes)
+        after, _ = DurableManifest(str(tmp_path)).replay()
+        assert after == records
+
+
+# -------------------------------------------------------------- cold tier
+
+
+class TestColdTier:
+    def _table(self):
+        return ResultTable(columns={"d": np.arange(8), "v": np.arange(8.0)})
+
+    def test_payload_roundtrip_and_sha_verification(self, tmp_path):
+        tier = ColdTier(str(tmp_path))
+        t = self._table()
+        payload = tier.write_payload("k" * 40, t)
+        rec = {"key": "k" * 40, **payload}
+        back = tier.read_payload(rec)
+        assert back is not None and back.equals(t)
+        # same-size bit flip: sha catches what file_bytes framing cannot
+        fpath = tmp_path / payload["file"]
+        data = bytearray(fpath.read_bytes())
+        data[len(data) // 2] ^= 0xFF
+        fpath.write_bytes(bytes(data))
+        assert tier.read_payload(rec) is None
+
+    def test_open_cleans_orphan_payloads_and_tmp_files(self, tmp_path):
+        (tmp_path / "entry_orphan.npz").write_bytes(b"junk")
+        (tmp_path / f"{payload_name('x' * 30)}.7.123.tmp").write_bytes(b"half")
+        tier = ColdTier(str(tmp_path))
+        assert tier.open() == {}
+        assert tier.replay_report["orphan_files"] == 2
+        leftovers = [f for f in os.listdir(tmp_path)
+                     if f.endswith(".npz") or f.endswith(".tmp")]
+        assert leftovers == []
+
+
+# ----------------------------------------------------------------- policy
+
+
+def _fake_entry(now, *, hits=0, idle=0.0, cost_ms=1.0, nbytes=1000):
+    return types.SimpleNamespace(hits=hits, last_used_at=now - idle,
+                                 stored_at=now - idle, cost_ms=cost_ms,
+                                 table_nbytes=nbytes)
+
+
+class TestPolicy:
+    def test_decayed_hits_halves_per_half_life(self):
+        now = 1000.0
+        e = _fake_entry(now, hits=8, idle=600.0)
+        assert storage_policy.decayed_hits(e, now, 600.0) == pytest.approx(4.0)
+        assert storage_policy.decayed_hits(e, now + 600.0, 600.0) == pytest.approx(2.0)
+
+    def test_score_orders_by_recompute_value_density(self):
+        now = 1000.0
+        keeper = _fake_entry(now, hits=10, idle=1.0, cost_ms=50.0, nbytes=1000)
+        victim = _fake_entry(now, hits=0, idle=3600.0, cost_ms=0.1, nbytes=100000)
+        s_keep = storage_policy.cost_benefit_score(keeper, now, 600.0)
+        s_drop = storage_policy.cost_benefit_score(victim, now, 600.0)
+        assert s_keep > s_drop
+
+    def test_make_policy(self):
+        assert storage_policy.make_policy("lru").name == "lru"
+        assert storage_policy.make_policy("cost").name == "cost"
+        with pytest.raises(ValueError):
+            storage_policy.make_policy("clock")
+
+    def test_cost_policy_picks_min_score_victim(self):
+        from collections import OrderedDict
+        now = 1000.0
+        entries = OrderedDict([
+            ("hot", _fake_entry(now, hits=20, idle=1.0, cost_ms=90.0)),
+            ("mid", _fake_entry(now, hits=2, idle=100.0, cost_ms=5.0)),
+            ("stale", _fake_entry(now, hits=0, idle=7200.0, cost_ms=0.0,
+                                  nbytes=10_000_000)),
+        ])
+        assert storage_policy.CostPolicy().victim(entries, now) == "stale"
+        assert storage_policy.LruPolicy().victim(entries, now) == "hot"
+
+
+# ----------------------------------------------------------- tiered cache
+
+
+class TestTieredCache:
+    def test_demote_promote_bit_identical(self, env, tmp_path):
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        nb = qt[0][1].nbytes()
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cache = fresh_cache(wl, capacity_bytes=int(nb * 2.5), policy="cost")
+        cache.attach_store(store)
+        for s, t in qt:
+            cache.put(s, t, cost_ms=5.0)
+        assert cache.stats.demotions > 0
+        assert len(cache.cold_keys()) > 0
+        for s, t in qt:
+            lr = cache.lookup(s)
+            assert lr.status == "hit_exact"
+            assert lr.table.equals(t)
+        assert cache.stats.promotions > 0
+        store.close()
+
+    def test_cold_hit_carries_tier_tag_hot_hit_does_not(self, env, tmp_path):
+        wl, canon, backend = env
+        (s, t), = year_queries(canon, backend, years=(1994,))
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cache = fresh_cache(wl)
+        cache.attach_store(store)
+        cache.put(s, t)
+        assert cache.lookup(s).tier is None
+        # force a demotion, then the next lookup promotes from cold
+        cache.capacity_bytes = 1
+        cache._enforce_capacity()
+        assert s.key() in cache.cold_keys()
+        cache.capacity_bytes = None
+        lr = cache.lookup(s)
+        assert lr.status == "hit_exact" and lr.tier == "cold"
+        assert lr.table.equals(t)
+        assert cache.lookup(s).tier is None  # resident again
+        store.close()
+
+    def test_differential_oracle_tiered_vs_all_hot(self, env, tmp_path):
+        """Identical request stream -> identical statuses and tables, the
+        only allowed difference being which tier served them."""
+        wl, canon, backend = env
+        stream = [q(f"d_year = {y}") for y in (1992, 1993, 1994, 1995, 1996)]
+        stream += [q("d_year = 1994", group="c_region"),   # exact re-hit
+                   q("d_year = 1994", group="c_nation")]   # new group
+        stream += [q(f"d_year = {y}") for y in (1992, 1995, 1996)]  # re-hits
+        sigs = [canon.canonicalize(sql) for sql in stream]
+        nb = backend.execute(sigs[0]).nbytes()
+
+        plain = fresh_cache(wl)
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        tiered = fresh_cache(wl, capacity_bytes=int(nb * 2.2), policy="cost")
+        tiered.attach_store(store)
+
+        for sig in sigs:
+            outs = []
+            for cache in (plain, tiered):
+                lr = cache.lookup(sig)
+                if lr.status == "miss":
+                    table = backend.execute(sig)
+                    cache.put(sig, table, cost_ms=3.0)
+                else:
+                    table = lr.table
+                outs.append((("miss" if lr.status == "miss" else lr.status),
+                             table))
+            assert outs[0][0] == outs[1][0], f"status diverged on {sig.key()}"
+            assert outs[0][1].equals(outs[1][1]), f"table diverged on {sig.key()}"
+        assert tiered.stats.demotions > 0  # the budget actually bit
+        store.close()
+
+    def test_lru_policy_differential_without_store_matches_legacy(self, env):
+        """policy='lru' with no store is the pre-tiering evictor: same
+        victims, same statuses."""
+        wl, canon, backend = env
+        qt = year_queries(canon, backend, years=(1992, 1993, 1994))
+        legacy = fresh_cache(wl, capacity=2)
+        lru = fresh_cache(wl, capacity=2, policy="lru")
+        for s, t in qt:
+            legacy.put(s, t)
+            lru.put(s, t)
+        for s, _ in qt:
+            assert legacy.lookup(s).status == lru.lookup(s).status
+
+    def test_ttl_expiry_counted_and_lazy(self, env):
+        wl, canon, backend = env
+        (s, t), = year_queries(canon, backend, years=(1994,))
+        cache = fresh_cache(wl)
+        cache.put(s, t, ttl_s=0.02)
+        assert cache.lookup(s).status == "hit_exact"
+        time.sleep(0.05)
+        assert cache.lookup(s).status == "miss"
+        assert cache.stats.ttl_expiries == 1
+        assert s.key() not in cache._entries
+
+    def test_entries_summary_exposes_policy_inputs(self, env):
+        wl, canon, backend = env
+        qt = year_queries(canon, backend, years=(1994, 1995))
+        cache = fresh_cache(wl)
+        for s, t in qt:
+            cache.put(s, t, cost_ms=7.0)
+        cache.lookup(qt[0][0])
+        rows = cache.entries_summary()
+        assert len(rows) == 2
+        for row in rows:
+            for field in ("key", "tier", "age_s", "idle_s", "hits",
+                          "decayed_hits", "cost_ms", "nbytes", "score",
+                          "version"):
+                assert field in row
+        assert {r["tier"] for r in rows} == {"hot"}
+        assert all(r["cost_ms"] == 7.0 for r in rows)
+
+    def test_tier_stats_shape(self, env, tmp_path):
+        wl, canon, backend = env
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cache = fresh_cache(wl)
+        cache.attach_store(store)
+        ts = cache.tier_stats()
+        for field in ("hot_entries", "cold_entries", "hot_bytes", "cold_bytes",
+                      "promotions", "demotions", "cold_drops", "ttl_expiries",
+                      "policy", "store"):
+            assert field in ts
+        assert ts["store"]["spill_queue_depth"] == 0
+        store.close()
+
+
+# ----------------------------------------------------------- warm restart
+
+
+class TestWarmRestart:
+    def test_save_load_shims_still_roundtrip(self, env, tmp_path):
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        cache = fresh_cache(wl)
+        for s, t in qt:
+            cache.put(s, t)
+        spill = str(tmp_path / "spill")
+        assert save_cache(cache, spill) == len(qt)
+        warm = fresh_cache(wl)
+        assert load_cache(warm, spill) == len(qt)
+        for s, t in qt:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+
+    def test_restart_restores_stamps_and_eviction_order(self, env, tmp_path):
+        """Satellite: persisted lru/store stamps reconstruct recency order
+        deterministically — the warm cache evicts the same victim the
+        original would have."""
+        wl, canon, backend = env
+        qt = year_queries(canon, backend, years=(1992, 1993, 1994))
+        cache = fresh_cache(wl, capacity=3)
+        for s, t in qt:
+            cache.put(s, t)
+        cache.lookup(qt[0][0])  # 1992 is now MRU; 1993 is LRU
+        spill = str(tmp_path / "spill")
+        save_cache(cache, spill)
+        orig_stamps = {k: (e.lru_stamp, e.store_stamp)
+                       for k, e in cache._entries.items()}
+
+        warm = fresh_cache(wl, capacity=3)
+        load_cache(warm, spill)
+        for k, stamps in orig_stamps.items():
+            e = warm.entry(k)
+            assert (e.lru_stamp, e.store_stamp) == stamps
+        assert list(warm._entries) == list(cache._entries)
+        extra = canon.canonicalize(q("d_year = 1996"))
+        warm.put(extra, backend.execute(extra))
+        assert warm.lookup(qt[1][0]).status == "miss"      # 1993 evicted
+        assert warm.lookup(qt[0][0]).status == "hit_exact"  # 1992 survived
+
+    def test_new_stamps_stay_above_restored_ones(self, env, tmp_path):
+        wl, canon, backend = env
+        qt = year_queries(canon, backend, years=(1994, 1995))
+        cache = fresh_cache(wl)
+        for s, t in qt:
+            cache.put(s, t)
+        spill = str(tmp_path / "spill")
+        save_cache(cache, spill)
+        warm = fresh_cache(wl)
+        load_cache(warm, spill)
+        restored_max = max(e.lru_stamp for e in warm._entries.values())
+        extra = canon.canonicalize(q("d_year = 1996"))
+        warm.put(extra, backend.execute(extra))
+        assert warm.entry(extra.key()).lru_stamp > restored_max
+
+    def test_incremental_save_rewrites_no_clean_payloads(self, env, tmp_path):
+        """Satellite: a second save of an unchanged cache appends metadata
+        records only — payload files are not rewritten."""
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        cache = fresh_cache(wl)
+        for s, t in qt:
+            cache.put(s, t)
+        spill = str(tmp_path / "spill")
+        save_cache(cache, spill)
+        mtimes = {f: os.stat(os.path.join(spill, f)).st_mtime_ns
+                  for f in os.listdir(spill) if f.endswith(".npz")}
+        assert len(mtimes) == len(qt)
+        save_cache(cache, spill)
+        after = {f: os.stat(os.path.join(spill, f)).st_mtime_ns
+                 for f in os.listdir(spill) if f.endswith(".npz")}
+        assert after == mtimes
+        # a mutated entry IS rewritten
+        cache.refresh_entry(qt[0][0].key(), qt[0][1], "snap1")
+        save_cache(cache, spill)
+        changed = {f: os.stat(os.path.join(spill, f)).st_mtime_ns
+                   for f in os.listdir(spill) if f.endswith(".npz")}
+        assert sum(changed[f] != mtimes[f] for f in mtimes) == 1
+
+    def test_attached_store_write_behind_then_restart(self, env, tmp_path):
+        """Write-through + async spill: the durable copy survives an
+        ungraceful stop (no close/compact — WAL only)."""
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cache = fresh_cache(wl, write_through=True)
+        cache.attach_store(store)
+        for s, t in qt:
+            cache.put(s, t, cost_ms=2.0)
+        assert store.flush()
+        # "kill": abandon cache + store without close()  (log not compacted)
+        store2 = TieredStore(str(tmp_path / "store"))
+        adopted = store2.open()
+        assert len(adopted) == len(qt)
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        for s, t in qt:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.tier == "cold"
+            assert lr.table.equals(t)
+        store2.close()
+
+
+# ----------------------------------------------------------- crash safety
+
+
+class TestCrashSafety:
+    def _persisted(self, env, tmp_path, n_years=4):
+        wl, canon, backend = env
+        years = (1992, 1993, 1994, 1995)[:n_years]
+        qt = year_queries(canon, backend, years=years)
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cache = fresh_cache(wl, write_through=True)
+        cache.attach_store(store)
+        for s, t in qt:
+            cache.put(s, t)
+        store.flush()
+        store.close()
+        return qt, str(tmp_path / "store")
+
+    def test_truncated_payload_is_a_miss_not_a_false_hit(self, env, tmp_path):
+        qt, root = self._persisted(env, tmp_path)
+        victim = payload_name(qt[0][0].key())
+        vpath = os.path.join(root, victim)
+        data = open(vpath, "rb").read()
+        with open(vpath, "wb") as f:
+            f.write(data[: len(data) // 2])  # torn mid-write
+        store = TieredStore(root)
+        adopted = store.open()
+        # size framing drops the torn record at replay; payload deleted
+        assert len(adopted) == len(qt) - 1
+        assert store.replay_report["missing_payloads"] == 1
+        wl, canon, backend = env
+        warm = fresh_cache(wl)
+        warm.attach_store(store, entries=adopted)
+        assert warm.lookup(qt[0][0]).status == "miss"
+        for s, t in qt[1:]:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+        store.close()
+
+    def test_same_size_corruption_fails_sha_and_misses(self, env, tmp_path):
+        qt, root = self._persisted(env, tmp_path)
+        victim = payload_name(qt[0][0].key())
+        vpath = os.path.join(root, victim)
+        data = bytearray(open(vpath, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        with open(vpath, "wb") as f:
+            f.write(bytes(data))
+        store = TieredStore(root)
+        adopted = store.open()
+        assert len(adopted) == len(qt)  # size framing can't see it
+        wl, canon, backend = env
+        warm = fresh_cache(wl)
+        warm.attach_store(store, entries=adopted)
+        lr = warm.lookup(qt[0][0])
+        assert lr.status == "miss"  # sha verification refused the payload
+        assert store.stats()["payload_corrupt"] == 1
+        # and the damaged entry is dropped, not retried forever
+        assert qt[0][0].key() not in warm.cold_keys()
+        store.close()
+
+    def test_partial_wal_record_recovers_prefix(self, env, tmp_path):
+        qt, root = self._persisted(env, tmp_path)
+        # post-close the manifest is compacted; write fresh WAL traffic and
+        # tear the last record mid-line
+        store = TieredStore(root)
+        adopted = store.open()
+        assert len(adopted) == len(qt)
+        store.close(compact=False)
+        with open(os.path.join(root, "manifest.log"), "ab") as f:
+            f.write(b'{"key":"torn-record-never-finished","op":"pu')
+        store2 = TieredStore(root)
+        assert len(store2.open()) == len(qt)
+        assert store2.stats()["torn_records"] == 1
+        store2.close()
+
+    def test_zero_false_hits_after_restart(self, env, tmp_path):
+        """Everything a warm-restarted cache serves equals direct backend
+        execution — the paper's zero-false-hit invariant, post-crash."""
+        qt, root = self._persisted(env, tmp_path)
+        wl, canon, backend = env
+        store = TieredStore(root)
+        warm = fresh_cache(wl)
+        warm.attach_store(store, entries=store.open())
+        probes = [canon.canonicalize(q(f"d_year = {y}"))
+                  for y in (1992, 1993, 1994, 1995)]
+        probes.append(canon.canonicalize(q("d_year = 1994", group="c_nation")))
+        for sig in probes:
+            lr = warm.lookup(sig)
+            if lr.status != "miss":
+                assert lr.table.equals(backend.execute(sig))
+        store.close()
+
+    def test_delete_tombstone_survives_restart(self, env, tmp_path):
+        qt, root = self._persisted(env, tmp_path)
+        store = TieredStore(root)
+        adopted = store.open()
+        wl, canon, backend = env
+        warm = fresh_cache(wl)
+        warm.attach_store(store, entries=adopted)
+        assert warm.drop(qt[0][0].key())
+        store.close(compact=False)  # tombstone lives in the WAL only
+        store2 = TieredStore(root)
+        assert len(store2.open()) == len(qt) - 1
+        assert not store2.has(qt[0][0].key())
+        store2.close()
+
+
+# ------------------------------------------------------ service lifecycle
+
+
+class TestServiceLifecycle:
+    def _service(self, wl):
+        from repro.service import CacheService
+
+        backend = OlapExecutor(wl.dataset, impl="numpy")
+        svc = CacheService()
+        svc.register_tenant("bi", schema=wl.schema, backend=backend,
+                            cache=fresh_cache(wl))
+        return svc, backend
+
+    def test_open_close_warm_restart(self, ssb_small, tmp_path):
+        from repro.service import QueryRequest
+
+        wl = ssb_small
+        root = str(tmp_path / "svc-store")
+        queries = [q(f"d_year = {y}") for y in (1992, 1993, 1994)]
+
+        svc, _ = self._service(wl)
+        assert svc.open(root) == {"bi": 0}
+        cold_results = [svc.submit(QueryRequest(sql=sql, tenant="bi"))
+                        for sql in queries]
+        assert all(r.status == "miss" for r in cold_results)
+        assert svc.close() == {"bi": len(queries)}
+
+        svc2, backend2 = self._service(wl)
+        adopted = svc2.open(root)
+        assert adopted == {"bi": len(queries)}
+        for sql, cold in zip(queries, cold_results):
+            r = svc2.submit(QueryRequest(sql=sql, tenant="bi"))
+            assert r.status == "hit_exact"
+            assert "tier:cold" in r.provenance
+            assert r.table.equals(cold.table)
+        svc2.close()
+
+    def test_stats_expose_tiers_and_entries(self, ssb_small, tmp_path):
+        from repro.service import QueryRequest
+
+        svc, _ = self._service(ssb_small)
+        svc.open(str(tmp_path / "svc-store"))
+        svc.submit(QueryRequest(sql=q(), tenant="bi"))
+        d = svc.stats("bi")
+        assert "tiers" in d
+        for field in ("hot_entries", "cold_entries", "hot_bytes", "cold_bytes",
+                      "promotions", "demotions", "spill_queue_depth"):
+            assert field in d["tiers"], field
+        assert "entries" not in d
+        d2 = svc.stats("bi", include_entries=True)
+        assert d2["entries"] and d2["entries"][0]["tier"] == "hot"
+        json.dumps(d2["entries"])  # summary must be JSON-serializable
+        svc.close()
+
+    def test_tenant_registered_after_open_gets_a_store(self, ssb_small, tmp_path):
+        from repro.service import CacheService, QueryRequest
+
+        wl = ssb_small
+        svc = CacheService()
+        svc.open(str(tmp_path / "svc-store"))
+        backend = OlapExecutor(wl.dataset, impl="numpy")
+        svc.register_tenant("late", schema=wl.schema, backend=backend,
+                            cache=fresh_cache(wl))
+        svc.submit(QueryRequest(sql=q(), tenant="late"))
+        svc.close()
+        assert os.path.isdir(os.path.join(str(tmp_path / "svc-store"), "late"))
+        svc2 = CacheService()
+        svc2.register_tenant("late", schema=wl.schema, backend=backend,
+                             cache=fresh_cache(wl))
+        assert svc2.open(str(tmp_path / "svc-store")) == {"late": 1}
+        r = svc2.submit(QueryRequest(sql=q(), tenant="late"))
+        assert r.status == "hit_exact" and "tier:cold" in r.provenance
+        svc2.close()
+
+
+# ----------------------------------------------------------- cluster tier
+
+
+class TestClusterTiered:
+    def test_shared_store_and_resharding_carry_cold_entries(self, env, tmp_path):
+        from repro.cluster import CacheCluster
+
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        nb = qt[0][1].nbytes()
+        cluster = CacheCluster(wl.schema, 2,
+                               level_mapper=wl.dataset.level_mapper(),
+                               capacity_bytes=int(nb * 3), policy="cost")
+        store = TieredStore(str(tmp_path / "store"))
+        store.open()
+        cluster.attach_store(store)
+        for s, t in qt:
+            cluster.put(s, t, cost_ms=4.0)
+        ts = cluster.tier_stats()
+        assert ts["demotions"] > 0 and ts["cold_entries"] > 0
+        for n in (3, 1):
+            cluster.set_shards(n)
+            for s, t in qt:
+                lr = cluster.lookup(s)
+                assert lr.status == "hit_exact", (n, lr.status)
+                assert lr.table.equals(t)
+        store.flush()
+        store.close()
+
+    def test_cluster_warm_restart_routes_by_family(self, env, tmp_path):
+        from repro.cluster import CacheCluster
+
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        root = str(tmp_path / "store")
+        cluster = CacheCluster(wl.schema, 3,
+                               level_mapper=wl.dataset.level_mapper(),
+                               write_through=True)
+        store = TieredStore(root)
+        store.open()
+        cluster.attach_store(store)
+        for s, t in qt:
+            cluster.put(s, t)
+        store.flush()
+        store.close()
+
+        store2 = TieredStore(root)
+        warm = CacheCluster(wl.schema, 3,
+                            level_mapper=wl.dataset.level_mapper())
+        adopted = warm.attach_store(store2, entries=store2.open())
+        assert adopted == len(qt)
+        for s, t in qt:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+        store2.close()
