@@ -1,0 +1,305 @@
+"""Fault-injection benchmark: availability and tail latency under chaos.
+
+Two experiments:
+
+* **Availability sweep** — a TTL-churning dashboard stream (short ``ttl_s``
+  keeps entries expiring, so the backend is exercised constantly and every
+  expired entry is a stale-serving candidate) runs under a mixed
+  deterministic fault plan (``backend.error`` + ``backend.latency`` +
+  ``storage.spill_error`` + ``coldtier.read_error``) at rates 0/1/10/25%,
+  once with the full resilience stack (retries, breakers, stale-on-error)
+  and once with recovery disabled (containment only — the control).  Per
+  cell: availability (success-or-degraded fraction), p50/p99 latency, retry
+  and degraded counts, and a **false-hit audit**: every table served — hit,
+  miss, or degraded-stale — is compared bit-for-bit against a directly
+  executed reference.  Acceptance: at a 10% fault rate the resilient run
+  keeps availability >= 99%, and *zero* false hits at every rate in both
+  modes.
+
+* **Breaker recovery** — the backend is hard-failed until the tenant's
+  backend breaker opens, then healed; the benchmark measures requests-to-open,
+  the fail-fast rejections while open, and the wall-clock from open to the
+  first served request (the half-open probe closing the breaker).
+  Acceptance: the breaker demonstrably closes again.
+
+Writes ``BENCH_faults.json``.
+
+    PYTHONPATH=src python benchmarks/bench_faults.py           # full run
+    PYTHONPATH=src python benchmarks/bench_faults.py --quick   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+
+JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+         "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+GROUPS = ("c_region", "c_nation", "c_city")
+MEASURES = ("SUM(lo_revenue) AS rev",
+            "SUM(lo_revenue) AS rev, COUNT(*) AS n",
+            "MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi")
+YEARS = (1992, 1993, 1994, 1995)
+
+RATES = (0.0, 0.01, 0.10, 0.25)
+FAULT_SEEDS = (11, 13, 17, 19)
+
+
+def build_population(n: int) -> list:
+    grid = [f"SELECT {g}, {m} FROM lineorder {JOINS}"
+            f"WHERE d_year = {y} GROUP BY {g}"
+            for y in YEARS for g in GROUPS for m in MEASURES]
+    return grid[:n]
+
+
+def zipf_stream(n_queries: int, length: int, seed: int, s: float = 0.8) -> list:
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_queries + 1) ** s
+    return list(rng.choice(n_queries, size=length, p=w / w.sum()))
+
+
+def fault_plan(rate: float) -> str:
+    points = ("backend.error", "backend.latency",
+              "storage.spill_error", "coldtier.read_error")
+    return ",".join(f"{p}:{rate}:{seed}"
+                    for p, seed in zip(points, FAULT_SEEDS))
+
+
+def make_service(wl, policy, root: str, ttl_s: float):
+    from repro.core import SemanticCache
+    from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService
+
+    svc = CacheService()
+    svc.register_tenant(
+        "t", schema=wl.schema,
+        backend=OlapExecutor(wl.dataset, impl="numpy"),
+        cache=SemanticCache(wl.schema, ttl_s=ttl_s,
+                            level_mapper=wl.dataset.level_mapper()),
+        resilience=policy)
+    svc.open(root)
+    return svc
+
+
+# ------------------------------------------------------- availability sweep
+
+
+def run_cell(wl, queries, stream, refs, rate: float, policy, root: str,
+             ttl_s: float) -> dict:
+    from repro.resilience import faults
+    from repro.service import QueryRequest
+
+    svc = make_service(wl, policy, root, ttl_s)
+    try:
+        for q in queries:  # warm: every query cached once, fault-free
+            svc.submit(QueryRequest(sql=q, tenant="t"))
+        served = errors = degraded = false_hits = 0
+        lat_ms = []
+        with faults.scoped(fault_plan(rate)):
+            for qi in stream:
+                t0 = time.perf_counter()
+                r = svc.submit(QueryRequest(sql=queries[qi], tenant="t"))
+                lat_ms.append((time.perf_counter() - t0) * 1e3)
+                if r.status == "error":
+                    errors += 1
+                    continue
+                served += 1
+                if r.status == "degraded":
+                    degraded += 1
+                if r.table is None or not r.table.equals(refs[qi]):
+                    false_hits += 1
+        stats = svc.tenant("t").stats
+        health = svc.health("t")
+        return {
+            "rate": rate,
+            "requests": len(stream),
+            "availability": round(served / len(stream), 4),
+            "errors": errors,
+            "degraded_served": degraded,
+            "false_hits": false_hits,
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(lat_ms, 99)), 3),
+            "retries": stats.retries,
+            "shed": stats.shed,
+            "breaker_opens": health["breakers"]["backend"]["opens"],
+            "store_spill_errors": health["storage"]["spill_errors"],
+        }
+    finally:
+        svc.close()
+
+
+def availability_sweep(wl, queries, stream, ttl_s: float) -> dict:
+    from repro.core.sql_canon import SQLCanonicalizer
+    from repro.olap.executor import OlapExecutor
+    from repro.resilience import ResiliencePolicy
+
+    canon = SQLCanonicalizer(wl.schema)
+    ref_exec = OlapExecutor(wl.dataset, impl="numpy")
+    refs = [ref_exec.execute(canon.canonicalize(q)) for q in queries]
+
+    cells = {"resilient": [], "containment_only": []}
+    for rate in RATES:
+        for mode, policy in (("resilient", ResiliencePolicy()),
+                             ("containment_only", ResiliencePolicy.disabled())):
+            root = tempfile.mkdtemp(prefix="bench_faults_")
+            try:
+                cell = run_cell(wl, queries, stream, refs, rate, policy,
+                                root, ttl_s)
+            finally:
+                shutil.rmtree(root, ignore_errors=True)
+            cells[mode].append(cell)
+            print(f"  rate {rate:>5.0%} {mode:>16}: availability "
+                  f"{cell['availability']:.4f}, p99 {cell['p99_ms']:.1f} ms, "
+                  f"{cell['degraded_served']} degraded, "
+                  f"{cell['retries']} retries, "
+                  f"{cell['false_hits']} false hits", flush=True)
+    at10 = next(c for c in cells["resilient"] if c["rate"] == 0.10)
+    return {
+        "ttl_s": ttl_s,
+        "fault_points": fault_plan(0.0),
+        "rates": list(RATES),
+        "resilient": cells["resilient"],
+        "containment_only": cells["containment_only"],
+        "zero_false_hits": all(
+            c["false_hits"] == 0
+            for cs in cells.values() for c in cs),
+        "availability_at_10pct": at10["availability"],
+        "meets_99pct_criterion": bool(at10["availability"] >= 0.99),
+    }
+
+
+# --------------------------------------------------------- breaker recovery
+
+
+class SwitchableBackend:
+    def __init__(self, inner):
+        self.inner = inner
+        self.down = False
+
+    def execute(self, sig):
+        if self.down:
+            raise RuntimeError("backend down (benchmark outage)")
+        return self.inner.execute(sig)
+
+    def execute_raw(self, sql):
+        return self.inner.execute_raw(sql)
+
+
+def breaker_recovery_experiment(wl) -> dict:
+    from repro.olap.executor import OlapExecutor
+    from repro.resilience import ResiliencePolicy
+    from repro.service import CacheService, QueryRequest
+
+    recovery_s = 0.25
+    be = SwitchableBackend(OlapExecutor(wl.dataset, impl="numpy"))
+    svc = CacheService()
+    svc.register_tenant(
+        "t", schema=wl.schema, backend=be,
+        resilience=ResiliencePolicy(execute_attempts=1, breaker_failures=3,
+                                    breaker_recovery_s=recovery_s,
+                                    serve_stale=False))
+    breaker = svc.tenant("t").resilience.backend
+    queries = iter(build_population(36))
+
+    be.down = True
+    to_open = 0
+    while breaker.snapshot()["state"] != "open":
+        svc.submit(QueryRequest(sql=next(queries), tenant="t"))
+        to_open += 1
+    t_open = time.perf_counter()
+    be.down = False  # the dependency heals; the breaker still gates it
+
+    recovery_ms = None
+    while True:
+        r = svc.submit(QueryRequest(sql=next(queries), tenant="t"))
+        if r.status == "miss":
+            recovery_ms = (time.perf_counter() - t_open) * 1e3
+            break
+        if time.perf_counter() - t_open > 10.0:
+            break
+        time.sleep(0.02)
+    snap = breaker.snapshot()
+    return {
+        "breaker_failures_threshold": 3,
+        "recovery_s_config": recovery_s,
+        "requests_to_open": to_open,
+        "fail_fast_rejections_while_open": snap["rejections"],
+        "open_to_served_ms": (round(recovery_ms, 1)
+                              if recovery_ms is not None else None),
+        "final_state": snap["state"],
+        "opens": snap["opens"],
+        "closes": snap["closes"],
+        "recovered": bool(snap["state"] == "closed" and snap["closes"] >= 1),
+    }
+
+
+# ---------------------------------------------------------------- driver
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=40_000, help="SSB fact rows")
+    ap.add_argument("--population", type=int, default=24,
+                    help="distinct queries in the Zipf population")
+    ap.add_argument("--requests", type=int, default=1_000,
+                    help="Zipfian stream length per cell")
+    ap.add_argument("--ttl-s", type=float, default=0.05,
+                    help="cache TTL: short enough that the stream keeps "
+                         "re-executing and stale candidates always exist")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 6k rows, 250 requests per cell")
+    args = ap.parse_args()
+    if args.quick:
+        args.rows, args.requests, args.population = 6_000, 250, 18
+
+    from repro.workloads import ssb
+
+    print(f"building SSB: {args.rows:,} fact rows ...", flush=True)
+    wl = ssb.build(n_fact=args.rows, seed=0)
+    queries = build_population(args.population)
+    stream = zipf_stream(len(queries), args.requests, seed=23)
+
+    print("availability sweep: fault rates x resilience on/off ...",
+          flush=True)
+    sweep = availability_sweep(wl, queries, stream, args.ttl_s)
+
+    print("breaker recovery: open -> half-open -> close ...", flush=True)
+    rec = breaker_recovery_experiment(wl)
+    print(f"  opened after {rec['requests_to_open']} failures, "
+          f"{rec['fail_fast_rejections_while_open']} fail-fast rejections, "
+          f"served again {rec['open_to_served_ms']} ms after opening "
+          f"({'recovered' if rec['recovered'] else 'STUCK'})")
+
+    report = {
+        "config": {"rows": args.rows, "population": args.population,
+                   "requests": args.requests, "ttl_s": args.ttl_s,
+                   "quick": args.quick},
+        "availability": sweep,
+        "breaker_recovery": rec,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if not sweep["zero_false_hits"]:
+        raise SystemExit("false hits observed under fault injection")
+    if not sweep["meets_99pct_criterion"]:
+        raise SystemExit(
+            f"availability at 10% fault rate was "
+            f"{sweep['availability_at_10pct']:.4f} (< 0.99)")
+    if not rec["recovered"]:
+        raise SystemExit("backend breaker never closed after the outage")
+
+
+if __name__ == "__main__":
+    main()

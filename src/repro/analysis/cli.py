@@ -24,7 +24,8 @@ from . import annotations as A
 from . import immutability, lockcheck, lockorder
 from .findings import load_baseline, split_baseline, write_report
 
-DEFAULT_PACKAGES = ("cluster", "service", "olap", "core", "storage")
+DEFAULT_PACKAGES = ("cluster", "service", "olap", "core", "storage",
+                    "resilience")
 
 
 def _repo_root() -> str:

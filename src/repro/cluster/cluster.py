@@ -241,6 +241,13 @@ class CacheCluster:
         gather in request order."""
         return [r[0] for r in self._scatter_gather(items, flights=False)]
 
+    def peek_stale(self, sig: Signature):
+        """Degraded-serving read on the routed shard (see
+        :meth:`CacheShard.peek_stale`); None when no stale copy exists."""
+        # shard.peek_stale re-acquires shard.lock (reentrant) — routed
+        # through _shard_op so a racing rebalance can't strand the read
+        return self._shard_op(sig, lambda shard: shard.peek_stale(sig))
+
     def lookup_or_flight(
         self, sig: Signature, request_origin: str = "sql"
     ) -> tuple[LookupResult, Optional[Flight], bool]:

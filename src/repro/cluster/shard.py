@@ -41,6 +41,12 @@ class CacheShard:
         with self.lock:
             return [self.cache.lookup(sig, origin) for sig, origin in items]
 
+    def peek_stale(self, sig: Signature):
+        """Degraded-serving read: a possibly-stale table for this signature
+        (hot even-if-expired, cold payload, or the TTL morgue), or None."""
+        with self.lock:
+            return self.cache.peek_stale(sig)
+
     def lookup_or_flight(
         self, sig: Signature, request_origin: str = "sql"
     ) -> tuple[LookupResult, Optional[Flight], bool]:

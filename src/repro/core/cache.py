@@ -280,6 +280,13 @@ class SemanticCache:
         # indexed probe (== position in the bucket's insertion-order list)
         self._seq = 0
         self._seq_of: dict[str, int] = {}
+        # stale-on-error morgue: the last tables of TTL-expired hot entries,
+        # kept (bounded, LRU) so degraded serving can offer an *explicitly
+        # tagged* stale answer when the backend is down.  Never consulted by
+        # lookup() — only by peek_stale(), and only the resilience plane
+        # calls that.
+        self._morgue: "OrderedDict[str, object]" = OrderedDict()
+        self.morgue_capacity = 128
         self.stats = CacheStats()
 
     # ------------------------------------------------------------------- api
@@ -570,6 +577,9 @@ class SemanticCache:
         n = len(self._entries) + len(self._cold)
         self._entries.clear()
         self._cold.clear()
+        # a schema change makes stale tables structurally wrong, not merely
+        # old: degraded serving must never offer them
+        self._morgue.clear()
         self._by_measures.clear()
         self._index_of.clear()
         self._seq_of.clear()
@@ -608,9 +618,34 @@ class SemanticCache:
 
     def _expire(self, key: str) -> None:
         """Lazy TTL expiry: drop the entry from whichever tier holds it (and
-        its durable record — an expired entry must not resurrect on replay)."""
+        its durable record — an expired entry must not resurrect on replay).
+        A resident table moves to the morgue first so degraded serving can
+        still offer it, explicitly tagged, when the backend is down."""
+        e = self._entries.get(key)
+        if e is not None and e.table is not None:
+            self._morgue[key] = e.table
+            self._morgue.move_to_end(key)
+            while len(self._morgue) > self.morgue_capacity:
+                self._morgue.popitem(last=False)
         self._remove(key)
         self.stats.ttl_expiries += 1
+
+    def peek_stale(self, sig: Signature):
+        """A possibly-stale table for this exact signature, or None — the
+        degraded-serving read.  Checks the hot tier (even if TTL-expired),
+        the cold tier via a non-mutating payload read (no promotion, no
+        counter churn), then the morgue of TTL-expired tables.  Never
+        derives, never touches hit accounting: callers *must* tag anything
+        served from here (``degraded:stale``)."""
+        key = sig.key()
+        e = self._entries.get(key)
+        if e is not None and e.table is not None:
+            return e.table
+        if key in self._cold and self.store is not None:
+            table = self.store.peek(key)
+            if table is not None:
+                return table
+        return self._morgue.get(key)
 
     # -------------------------------------------------------------- tiering
     def _resolve_policy(self):
@@ -626,12 +661,16 @@ class SemanticCache:
     def _promote(self, key: str) -> Optional[CacheEntry]:
         """Bring a demoted entry back hot.  ``None`` (and the cold meta is
         dropped) when the payload is damaged — a cold read never turns into
-        a false hit.  The durable record stays: the cold copy remains a
-        clean replica until the entry is rewritten or dropped."""
+        a false hit.  A *transient* read failure (IO errors, cold breaker
+        open) is a miss too, but the cold entry is kept: the durable replica
+        is intact and serves again once the tier recovers."""
         e = self._cold.get(key)
         if e is None:
             return None
-        table = self.store.promote(key) if self.store is not None else None
+        try:
+            table = self.store.promote(key) if self.store is not None else None
+        except OSError:
+            return None  # unavailable, not damaged: keep the replica
         if table is None:
             self._drop_cold(key)
             return None

@@ -55,6 +55,7 @@ from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError, SQLCanonicalizer
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
 from ..core.table import ResultTable
+from ..resilience import faults
 from ..kernels.seg_agg.ops import (seg_agg, seg_agg_batch_blocks,
                                    seg_agg_fused, seg_agg_masked)
 from . import scan_plane
@@ -522,6 +523,10 @@ class OlapExecutor:
         independent, so two-level partition-then-global merging is exact).
         ``dev`` pins all of the partition's uploads and launches to one JAX
         device via the thread-local default-device context."""
+        # chaos: one partition worker fails while its siblings succeed — the
+        # whole batch must error (a merge over missing partials would be a
+        # silent wrong answer), and the caller's retry machinery re-runs it
+        faults.fire("backend.partial")
         if dev is not None:
             import jax
 

@@ -21,6 +21,7 @@ from ..analysis.sanitizer import make_lock, note_acquire, note_release
 from ..core.middleware import Backend
 from ..core.signature import Filter, OrderKey, Signature, TimeWindow
 from ..core.table import ResultTable
+from ..resilience.errors import FailureInfo
 
 DEFAULT_TENANT = "default"
 
@@ -54,6 +55,13 @@ class QueryRequest:
     Consistency options: ``read_only`` serves from cache or executes but
     never stores (probe semantics); ``refresh`` skips the cache read and
     re-executes, re-storing the fresh result (forced freshness).
+
+    ``deadline_ms`` is a per-request wall-clock budget: stages check it
+    before starting expensive work (the canonicalizer call, a backend
+    execute) and shed the request — serving a stale cached answer with
+    ``degraded:stale`` provenance when one exists, a typed ``deadline``
+    error otherwise — instead of burning backend time on a request whose
+    caller has already given up.
     """
 
     sql: Optional[str] = None
@@ -72,6 +80,8 @@ class QueryRequest:
     # consistency options
     read_only: bool = False
     refresh: bool = False
+    # per-request deadline budget (wall-clock milliseconds), None = unbounded
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         forms = [f for f, v in (("sql", self.sql), ("nl", self.nl),
@@ -99,7 +109,11 @@ class QueryResult:
     """Structured response for one :class:`QueryRequest`.
 
     ``status`` matches the middleware vocabulary ('hit_exact' | 'hit_rollup'
-    | 'hit_filterdown' | 'hit_compose' | 'miss' | 'bypass').  ``provenance``
+    | 'hit_filterdown' | 'hit_compose' | 'miss' | 'bypass'), extended by the
+    resilience plane with 'degraded' (a dependency failed but a stale cached
+    answer was served, explicitly tagged ``degraded:stale`` in provenance)
+    and 'error' (a dependency failed and nothing was safe to serve — a typed
+    :class:`FailureInfo` in ``error``, never a raw exception).  ``provenance``
     is the ordered chain of pipeline-stage outcomes the request passed
     through (e.g. ``('canonicalize:sql', 'validate:ok', 'lookup:miss',
     'execute:batched', 'store')``); ``timings_ms`` holds per-stage wall time.
@@ -121,10 +135,19 @@ class QueryResult:
     timings_ms: dict[str, float] = dataclasses.field(default_factory=dict)
     batched: bool = False
     deduped: bool = False
+    # typed failure record for 'degraded'/'error' (and contained store
+    # failures on otherwise-successful requests)
+    error: Optional[FailureInfo] = None
 
     @property
     def hit(self) -> bool:
         return self.status.startswith("hit")
+
+    @property
+    def ok(self) -> bool:
+        """Success-or-explicitly-degraded: the availability predicate the
+        chaos bench measures.  Only 'error' results are not ok."""
+        return self.status != "error"
 
     def to_dict(self, include_table: bool = False) -> dict[str, Any]:
         d: dict[str, Any] = {
@@ -145,6 +168,8 @@ class QueryResult:
             d["source_origin"] = self.source_origin
         if self.source_snapshot is not None:
             d["source_snapshot"] = self.source_snapshot
+        if self.error is not None:
+            d["error"] = self.error.to_dict()
         if include_table and self.table is not None:
             d["table"] = {n: self.table.columns[n].tolist() for n in self.table.names}
         return d
@@ -294,6 +319,14 @@ class TenantStats:
     # cross-thread misses served by another's flight
     coalesced_misses: int = 0  # guarded-by: self._lock
     stores: int = 0  # guarded-by: self._lock
+    # resilience counters: retry attempts spent on failing executes, requests
+    # served degraded (stale-but-tagged), requests shed on deadline, requests
+    # that ended in a typed error, and contained cache-store failures
+    retries: int = 0  # guarded-by: self._lock
+    degraded: int = 0  # guarded-by: self._lock
+    shed: int = 0  # guarded-by: self._lock
+    failures: int = 0  # guarded-by: self._lock
+    store_errors: int = 0  # guarded-by: self._lock
     stage_timings: dict = dataclasses.field(  # guarded-by: self._lock
         default_factory=dict, repr=False, compare=False)
     _lock: threading.Lock = dataclasses.field(

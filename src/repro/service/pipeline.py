@@ -34,6 +34,19 @@ pipeline additionally becomes concurrency-aware:
 
 Each stage records its wall time per request; the outcome chain is kept in
 ``provenance`` so every decision is auditable from the ``QueryResult``.
+
+**Failure containment** (the resilience plane): no dependency failure —
+backend execute, canonicalizer call, storage write — escapes
+:func:`run_pipeline` as a raw exception.  Failures resolve per-request to a
+``status='degraded'`` result (a stale cached answer, explicitly tagged
+``degraded:stale``) or a ``status='error'`` result carrying a typed
+:class:`FailureInfo` — never a silent wrong answer, never a stack trace for
+co-batched innocents.  The tenant's :class:`ResiliencePolicy` adds recovery
+on top of containment: retry with backoff for the idempotent execute stage,
+per-dependency circuit breakers with half-open probing, per-request deadline
+budgets, and stale-on-error serving.  The chaos harness
+(:mod:`repro.resilience.faults`) injects failures at each of these
+boundaries so every one of those promises is testable deterministically.
 """
 from __future__ import annotations
 
@@ -48,6 +61,9 @@ from ..core.safety import gate_nl, verify_hit_time_window
 from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
+from ..resilience import faults
+from ..resilience.errors import FailureInfo, classify
+from ..resilience.primitives import Deadline, backoff_delays
 from .api import QueryRequest, QueryResult
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -81,6 +97,10 @@ class RequestState:
     flight: object = None
     flight_leader: bool = False
     stored: bool = False  # entry already put (flight leaders store early)
+    # resilience state: the typed failure record (for degraded/error
+    # outcomes) and the request's wall-clock budget
+    error: Optional[FailureInfo] = None
+    deadline: Optional[Deadline] = None
     provenance: list = dataclasses.field(default_factory=list)
     timings: dict = dataclasses.field(default_factory=dict)
 
@@ -101,11 +121,28 @@ class RequestState:
 
 def run_pipeline(tenant: "Tenant", requests: list[QueryRequest]) -> list[QueryResult]:
     states = [RequestState(req=r, origin=r.kind) for r in requests]
+    for s in states:
+        if s.req.deadline_ms is not None:
+            s.deadline = Deadline.after_ms(s.req.deadline_ms)
     tenant.stats.bump(requests=len(states), batches=1)
     try:
-        for stage in (_stage_canonicalize, _stage_validate, _stage_gate,
-                      _stage_lookup, _stage_plan_and_execute, _stage_store):
-            stage(tenant, states)
+        for name, stage in (("canonicalize", _stage_canonicalize),
+                            ("validate", _stage_validate),
+                            ("gate", _stage_gate),
+                            ("lookup", _stage_lookup),
+                            ("execute", _stage_plan_and_execute),
+                            ("store", _stage_store)):
+            try:
+                stage(tenant, states)
+            except Exception as e:  # noqa: BLE001 — containment boundary
+                # a stage-level crash must not escape as a raw exception:
+                # every still-pending request resolves to a typed error, and
+                # the finally below wakes any followers this batch leads
+                for s in states:
+                    if s.pending:
+                        _fail_state(tenant, s, name, "internal",
+                                    f"{type(e).__name__}: {e}")
+                break
     finally:
         # never strand a follower: if this batch dies mid-pipeline, every
         # flight it leads is failed so waiters wake up and fall back to
@@ -117,6 +154,59 @@ def run_pipeline(tenant: "Tenant", requests: list[QueryRequest]) -> list[QueryRe
                     fail(s.flight,
                          RuntimeError("pipeline aborted before flight completion"))
     return [_finalize(tenant, s) for s in states]
+
+
+# ------------------------------------------------------------ failure paths
+
+
+def _peek_stale(tenant: "Tenant", sig: Optional[Signature]):
+    """Best-effort fetch of a TTL-expired cached table for degraded serving.
+    Returns None when the cache keeps no stale copy (or cannot peek) — the
+    degraded path must itself never raise."""
+    if sig is None:
+        return None
+    peek = getattr(tenant.cache, "peek_stale", None)
+    if peek is None:
+        return None
+    try:
+        return peek(sig)
+    except Exception:  # noqa: BLE001 — last-resort path, swallow and miss
+        return None
+
+
+def _conclude_failure(tenant: "Tenant", s: RequestState, stage: str,
+                      kind: str, message: str, *, retries: int = 0,
+                      breaker: Optional[str] = None,
+                      shed: bool = False) -> None:
+    """Resolve a failed request to a structured outcome: a ``degraded``
+    result serving a TTL-expired cached answer (explicitly tagged, never
+    silent) when the policy allows and a stale copy exists, else a typed
+    ``error`` result.  Either way the caller gets a ``QueryResult`` carrying
+    a :class:`FailureInfo` — raw exceptions stop here."""
+    info = FailureInfo(stage=stage, kind=kind, message=message,
+                       retries=retries, breaker=breaker)
+    s.store = False
+    s.error = info
+    extra = {"shed": 1} if shed else {}
+    pol = tenant.resilience.policy
+    if pol.enabled and pol.serve_stale and not s.req.refresh:
+        stale = _peek_stale(tenant, s.sig)
+        if stale is not None:
+            info.degraded = True
+            s.status = "degraded"
+            s.table = stale
+            s.provenance.append("degraded:stale")
+            s.provenance.append(f"failure:{info.brief()}")
+            tenant.stats.bump(degraded=1, **extra)
+            return
+    s.status = "error"
+    s.table = None
+    s.provenance.append(f"failure:{info.brief()}")
+    tenant.stats.bump(failures=1, **extra)
+
+
+# the stage-crash containment boundary uses the same conclusion logic
+_fail_state = _conclude_failure
 
 
 # ------------------------------------------------------------- canonicalize
@@ -161,22 +251,66 @@ def _canonicalize_nl(tenant: "Tenant", states: list[RequestState]) -> None:
             s.add_ms("canonicalize", 0.0)
             s.bypass("no NL canonicalizer configured")
         return
+    pol = tenant.resilience.policy
+    breaker = tenant.resilience.canonicalizer
+    # shed requests whose deadline already expired before spending model time
+    live: list[RequestState] = []
+    for s in states:
+        if pol.enabled and s.deadline is not None and s.deadline.expired:
+            _conclude_failure(tenant, s, "canonicalize", "deadline",
+                              "deadline expired before canonicalization",
+                              shed=True)
+        else:
+            live.append(s)
     # group by the `now` anchor so each group can share one batched model call
     groups: dict[Optional[str], list[RequestState]] = {}
-    for s in states:
+    for s in live:
         groups.setdefault(s.req.now.isoformat() if s.req.now else None, []).append(s)
     batch_fn = getattr(tenant.nl, "canonicalize_batch", None)
     for group in groups.values():
         now = group[0].req.now
+        if pol.enabled and not breaker.allow():
+            for s in group:
+                s.provenance.append("breaker:open")
+                _conclude_failure(tenant, s, "canonicalize", "breaker_open",
+                                  "canonicalizer circuit breaker open",
+                                  breaker="open")
+            continue
         t0 = time.perf_counter()
-        if batch_fn is not None and len(group) > 1:
-            results = batch_fn([s.req.nl for s in group], now)
-            tag = "canonicalize:nl_batched"
-        else:
-            results = [tenant.nl.canonicalize(s.req.nl, now) for s in group]
-            tag = "canonicalize:nl"
+        try:
+            # chaos: a hung/timed-out LLM call surfaces here, before any
+            # per-request result exists
+            faults.fire("canonicalize.timeout")
+            if batch_fn is not None and len(group) > 1:
+                results = batch_fn([s.req.nl for s in group], now)
+                tag = "canonicalize:nl_batched"
+            else:
+                results = [tenant.nl.canonicalize(s.req.nl, now) for s in group]
+                tag = "canonicalize:nl"
+        except Exception as e:  # noqa: BLE001 — containment boundary
+            ms = (time.perf_counter() - t0) * 1e3 / len(group)
+            if pol.enabled:
+                breaker.record_failure()
+            for s in group:
+                s.add_ms("canonicalize", ms)
+                _conclude_failure(
+                    tenant, s, "canonicalize", classify(e),
+                    f"{type(e).__name__}: {e}",
+                    breaker=breaker.state if pol.enabled else None)
+            continue
+        if pol.enabled:
+            breaker.record_success()
         ms = (time.perf_counter() - t0) * 1e3 / len(group)
         for s, res in zip(group, results):
+            # chaos: corrupt the model's *output* — garbage JSON loses the
+            # signature (bypass, never a wrong cache key); lowconf drops the
+            # confidence under the acceptance threshold (gated to bypass)
+            if faults.should_fire("canonicalize.garbage"):
+                res = dataclasses.replace(
+                    res, signature=None, confidence=0.0,
+                    error="injected fault: canonicalizer returned garbage")
+            elif faults.should_fire("canonicalize.lowconf"):
+                res = dataclasses.replace(res, confidence=0.01)
             s.add_ms("canonicalize", ms)
             s.nl_res = res
             s.confidence = res.confidence
@@ -355,19 +489,31 @@ def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> Non
     if shard_groups is not None:
         _execute_shard_groups(tenant, shard_groups)
     elif len(leaders) > 1 and hasattr(tenant.backend, "execute_batch"):
-        _execute_leader_group(tenant, leaders)
-        tenant.stats.bump(backend_executions=len(leaders),
-                          batched_misses=len(leaders))
+        _execute_group_guarded(tenant, leaders)
     else:
         for s in leaders:
-            _execute_leader_group(tenant, [s])
-            tenant.stats.bump(backend_executions=1)
+            _execute_group_guarded(tenant, [s])
     for group in misses.values():
-        for s in group:
-            s.status = "miss"
-            if s is not group[0]:
-                s.table = group[0].table
-                s.batched = group[0].batched
+        lead = group[0]
+        if lead.status is None:
+            lead.status = "miss"
+        for s in group[1:]:
+            # dedup followers adopt the leader's outcome wholesale — status,
+            # table, and failure record alike (a failed leader must not leave
+            # followers pending, and a degraded leader's stale table stays
+            # tagged on every requester it serves)
+            s.status = lead.status
+            s.table = lead.table
+            s.batched = lead.batched
+            if lead.error is not None:
+                s.error = dataclasses.replace(lead.error)
+                s.store = False
+                s.provenance.append(f"failure:{lead.error.brief()}")
+                if lead.status == "degraded":
+                    s.provenance.append("degraded:stale")
+                    tenant.stats.bump(degraded=1)
+                else:
+                    tenant.stats.bump(failures=1)
 
     # resolve this batch's flights so followers (here and on other threads)
     # unblock; then serve our own followers.  Scanned over all states, not
@@ -380,25 +526,47 @@ def _stage_plan_and_execute(tenant: "Tenant", states: list[RequestState]) -> Non
     # execution, say) must not lose the only copy of a result followers
     # adopted with store=False
     complete = getattr(tenant.cache, "complete_flight", None)
+    fail = getattr(tenant.cache, "fail_flight", None)
     if complete is not None:
         for s in states:
             if s.flight is not None and s.flight_leader and not s.flight.done:
-                if s.store and s.table is not None:
-                    _store_state(tenant, s)
-                complete(s.flight, s.table)
+                if s.status == "miss" and s.table is not None:
+                    if s.store:
+                        _store_state(tenant, s)
+                    complete(s.flight, s.table)
+                elif fail is not None:
+                    # a failed or degraded leader must not publish its result:
+                    # followers adopting a stale table through the flight
+                    # would serve it *untagged*.  Fail the flight so waiters
+                    # fall back to executing (and tagging) for themselves
+                    fail(s.flight, RuntimeError(
+                        s.error.brief() if s.error is not None
+                        else f"leader resolved {s.status or 'unresolved'}"))
     for s in followers:
         _resolve_follower(tenant, s)
 
-    # bypass executions (raw SQL or a validated-but-gated NL signature)
+    # bypass executions (raw SQL or a validated-but-gated NL signature); no
+    # retries or breaker here — bypasses are out-of-scope by definition —
+    # but failures still resolve to structured errors, not raw exceptions
     for s in states:
         if s.status != "bypass" or s.bypass_exec is None:
             continue
         t0 = time.perf_counter()
-        with tenant.gate.read:
-            if s.bypass_exec == "raw":
-                s.table = tenant.backend.execute_raw(s.req.sql)
-            else:
-                s.table = tenant.backend.execute(s.sig)
+        try:
+            with tenant.gate.read:
+                if s.bypass_exec == "raw":
+                    s.table = tenant.backend.execute_raw(s.req.sql)
+                else:
+                    s.table = tenant.backend.execute(s.sig)
+        except Exception as e:  # noqa: BLE001 — containment boundary
+            s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
+            s.status = "error"
+            s.table = None
+            s.error = FailureInfo(stage="execute", kind=classify(e),
+                                  message=f"{type(e).__name__}: {e}")
+            s.provenance.append(f"failure:{s.error.brief()}")
+            tenant.stats.bump(failures=1)
+            continue
         s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
         tenant.stats.bump(backend_executions=1)
         s.provenance.append(f"execute:bypass_{s.bypass_exec}")
@@ -435,46 +603,143 @@ def _execute_leader_group(tenant: "Tenant", group: list[RequestState]) -> None:
             s.provenance.append("execute:partitioned")
 
 
+def _execute_group_guarded(tenant: "Tenant",
+                           group: list[RequestState]) -> bool:
+    """Run one miss-leader group through the backend behind the full guard
+    stack: deadline shed, breaker admission, bounded retry with deterministic
+    backoff, and per-leader isolation when a shared batch fails.  Requests
+    that cannot be served resolve to degraded/error via
+    :func:`_conclude_failure`; returns True when every leader got a table.
+    Thread-safe (shard groups call this from pool threads): all counter
+    bumps go through the lock-guarded ``TenantStats.bump``."""
+    pol = tenant.resilience.policy
+    breaker = tenant.resilience.backend
+    if pol.enabled:
+        live = []
+        for s in group:
+            if s.deadline is not None and s.deadline.expired:
+                # shed: don't spend backend time on an already-dead request
+                _conclude_failure(tenant, s, "execute", "deadline",
+                                  "deadline expired before execution",
+                                  shed=True)
+            else:
+                live.append(s)
+        group = live
+        if not group:
+            return False
+        if not breaker.allow():
+            for s in group:
+                s.provenance.append("breaker:open")
+                _conclude_failure(tenant, s, "execute", "breaker_open",
+                                  "backend circuit breaker open",
+                                  breaker="open")
+            return False
+    attempts = max(pol.execute_attempts, 1) if pol.enabled else 1
+    salt = group[0].sig.key() if group[0].sig is not None else ""
+    delays = backoff_delays(attempts, pol.retry_base_s, pol.retry_max_s, salt)
+    err: Optional[BaseException] = None
+    retries_used = 0
+    for attempt in range(attempts):
+        try:
+            lat = faults.latency_s("backend.latency")
+            if lat:
+                time.sleep(lat)  # injected latency spike, not a failure
+            faults.fire("backend.error")
+            _execute_leader_group(tenant, group)
+            err = None
+            break
+        except Exception as e:  # noqa: BLE001 — containment boundary
+            err = e
+            if attempt + 1 < attempts:
+                retries_used += 1
+                tenant.stats.bump(retries=1)
+                time.sleep(delays[attempt])
+    if err is None and any(s.flight_leader for s in group) \
+            and faults.should_fire("flight.leader_death"):
+        # chaos: the single-flight leader dies *after* computing its result
+        # but *before* publishing it.  Deliberately not retryable — the
+        # point of this fault is that followers coalesced onto the flight
+        # must survive via the self-execute fallback, not that the leader
+        # quietly recovers.  The backend call itself succeeded, so the
+        # breaker is not charged.
+        for s in group:
+            s.table = None
+            s.batched = False
+            _conclude_failure(tenant, s, "execute", "fault",
+                              "injected fault: flight.leader_death")
+        return False
+    if err is None:
+        if pol.enabled:
+            breaker.record_success()
+        tenant.stats.bump(backend_executions=len(group))
+        if len(group) > 1:
+            tenant.stats.bump(batched_misses=len(group))
+        if retries_used:
+            for s in group:
+                s.provenance.append(f"retry:{retries_used}")
+        return True
+    if pol.enabled:
+        breaker.record_failure()
+    if len(group) > 1:
+        # a shared batch scan may have died on one poisoned signature:
+        # isolate and re-run each leader alone so one bad intent cannot
+        # take down its co-batched innocents
+        ok = True
+        for s in group:
+            s.provenance.append("execute:isolated_retry")
+            ok = _execute_group_guarded(tenant, [s]) and ok
+        return ok
+    _conclude_failure(tenant, group[0], "execute", classify(err),
+                      f"{type(err).__name__}: {err}", retries=retries_used,
+                      breaker=breaker.state if pol.enabled else None)
+    return False
+
+
 def _execute_shard_groups(tenant: "Tenant",
                           groups: list[list[RequestState]]) -> None:
     """Execute per-shard miss groups concurrently (the caller guarantees >= 2
     groups and an opted-in cluster).  Safe because the OlapExecutor's plan
     memos are idempotent, its counters are lock-guarded, and its kernels
-    release the GIL during numpy/JAX work, so shard groups overlap."""
+    release the GIL during numpy/JAX work, so shard groups overlap.  Each
+    group fails *independently*: one shard's backend error resolves only
+    that group's requests, never its co-batched neighbours."""
     with ThreadPoolExecutor(max_workers=len(groups),
                             thread_name_prefix="shard-miss") as pool:
-        futures = [pool.submit(_execute_leader_group, tenant, g)
+        futures = [pool.submit(_execute_group_guarded, tenant, g)
                    for g in groups]
-        for f in futures:
-            f.result()  # propagate the first execution error
-    tenant.stats.bump(
-        backend_executions=sum(len(g) for g in groups),
-        batched_misses=sum(len(g) for g in groups if len(g) > 1))
+        for f, g in zip(futures, groups):
+            try:
+                f.result()
+            except Exception as e:  # noqa: BLE001 — belt and braces: the
+                # guarded runner contains failures itself; if it somehow
+                # raises, fail only this group's still-pending requests
+                for s in g:
+                    if s.pending:
+                        _conclude_failure(tenant, s, "execute", "internal",
+                                          f"{type(e).__name__}: {e}")
 
 
 def _resolve_follower(tenant: "Tenant", s: RequestState) -> None:
     """Wait for the flight owning this signature; on success adopt its table,
-    on leader failure/timeout execute directly — coalescing is opportunistic,
-    never load-bearing."""
+    on leader failure/timeout execute directly (through the same guard
+    stack) — coalescing is opportunistic, never load-bearing."""
     timeout = getattr(tenant.cache, "flight_timeout", 30.0)
     t0 = time.perf_counter()
     ok = s.flight.wait(timeout)
     s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
-    s.status = "miss"
     s.deduped = True
     if ok and s.flight.ok and s.flight.table is not None:
+        s.status = "miss"
         s.table = s.flight.table
         # the leader's store is authoritative; a second identical put would
         # only inflate store counters
         s.store = False
         tenant.stats.bump(coalesced_misses=1)
         return
-    t0 = time.perf_counter()
-    with tenant.gate.read:
-        s.table = tenant.backend.execute(s.sig)
-    s.add_ms("execute", (time.perf_counter() - t0) * 1e3)
-    tenant.stats.bump(backend_executions=1)
     s.provenance.append("execute:flight_fallback")
+    _execute_group_guarded(tenant, [s])
+    if s.status is None:
+        s.status = "miss"
 
 
 # -------------------------------------------------------------------- store
@@ -482,12 +747,20 @@ def _resolve_follower(tenant: "Tenant", s: RequestState) -> None:
 
 def _store_state(tenant: "Tenant", s: RequestState) -> None:
     t0 = time.perf_counter()
-    tenant.cache.put(s.sig, s.table,
-                     origin="nl" if s.origin == "nl" else "sql",
-                     snapshot_id=tenant.snapshot_id,
-                     # recompute-cost estimate for the cost-benefit eviction
-                     # policy: what this entry's miss actually paid to execute
-                     cost_ms=s.timings.get("execute", 0.0))
+    try:
+        tenant.cache.put(s.sig, s.table,
+                         origin="nl" if s.origin == "nl" else "sql",
+                         snapshot_id=tenant.snapshot_id,
+                         # recompute-cost estimate for the cost-benefit
+                         # eviction policy: what this entry's miss actually
+                         # paid to execute
+                         cost_ms=s.timings.get("execute", 0.0))
+    except Exception:  # noqa: BLE001 — a failed store must not fail the
+        # request: the table is already in hand, the cache just stays cold
+        s.add_ms("store", (time.perf_counter() - t0) * 1e3)
+        s.provenance.append("store:error")
+        tenant.stats.bump(store_errors=1)
+        return
     s.add_ms("store", (time.perf_counter() - t0) * 1e3)
     s.stored = True
     tenant.stats.bump(stores=1)
@@ -530,4 +803,5 @@ def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
         timings_ms=dict(s.timings),
         batched=s.batched,
         deduped=s.deduped,
+        error=s.error,
     )

@@ -31,6 +31,7 @@ from ..core.safety import SafetyPolicy
 from ..core.schema import StarSchema
 from ..core.sql_canon import SQLCanonicalizer
 from ..core.validator import SignatureValidator
+from ..resilience.policy import ResiliencePolicy, TenantResilience
 from .api import (DEFAULT_TENANT, Backend, QueryRequest, QueryResult,
                   ReadWriteGate, RefreshReport, TenantStats)
 from .pipeline import run_pipeline
@@ -73,6 +74,10 @@ class Tenant:
     # read side held around backend executions; write side held while
     # advance_snapshot mutates the dataset under concurrent request threads
     gate: ReadWriteGate = dataclasses.field(default_factory=ReadWriteGate)
+    # resilience plane: per-dependency circuit breakers + the tenant's
+    # recovery policy (retries, deadlines, stale-on-error)
+    resilience: TenantResilience = dataclasses.field(
+        default_factory=TenantResilience)
 
 
 class CacheService:
@@ -100,6 +105,7 @@ class CacheService:
         metrics: Optional[MetricLayer] = None,
         snapshot_id: str = "snap0",
         shards: Optional[int] = None,
+        resilience: "Optional[ResiliencePolicy | TenantResilience]" = None,
     ) -> Tenant:
         """Register a tenant.  Tenants are isolated structurally (each has
         its own cache instance) and by key space (request ``scope`` is part
@@ -113,7 +119,17 @@ class CacheService:
         configuration (capacity, derivation flags, level mapper) to every
         shard; ``shards=1`` is behavior-compatible with the unsharded path.
         A pre-built ``CacheCluster`` may also be passed directly as
-        ``cache=``."""
+        ``cache=``.
+
+        ``resilience=`` takes a :class:`ResiliencePolicy` (or a pre-built
+        :class:`TenantResilience`) controlling the tenant's recovery
+        behavior — retry budgets, circuit-breaker thresholds, deadline
+        shedding, stale-on-error serving.  Error *containment* (structured
+        degraded/error results, never raw exceptions from the pipeline) is
+        unconditional; ``ResiliencePolicy.disabled()`` turns off only the
+        recovery machinery."""
+        if isinstance(resilience, ResiliencePolicy):
+            resilience = TenantResilience(resilience)
         if shards is not None:
             if isinstance(cache, CacheCluster):
                 if cache.num_shards != shards:
@@ -129,6 +145,8 @@ class CacheService:
             sql_canon=SQLCanonicalizer(schema),
             validator=SignatureValidator(schema),
             stats=TenantStats(),
+            resilience=(resilience if resilience is not None
+                        else TenantResilience()),
         )
         with self._reg_lock:
             # check-then-insert must be one atomic step: two concurrent
@@ -441,3 +459,44 @@ class CacheService:
             return d
         return {name: self.stats(name, include_entries=include_entries)
                 for name in self.tenants()}
+
+    def health(self, tenant: Optional[str] = None) -> dict:
+        """The resilience plane's health surface: per-tenant circuit-breaker
+        snapshots (canonicalizer, backend, and the cold tier's breaker when a
+        durable store is attached), degraded/failure/retry/shed counters, and
+        storage error gauges (spill retries/drops, WAL + cold-read errors).
+        ``status`` is ``ok`` when every breaker is closed and nothing is
+        degrading, ``degraded`` otherwise — a load balancer's readiness
+        probe, not a liveness one (a degraded tenant still serves)."""
+        if tenant is not None:
+            t = self.tenant(tenant)
+            breakers = t.resilience.breakers()
+            d: dict = {
+                "policy_enabled": t.resilience.policy.enabled,
+                "breakers": breakers,
+            }
+            svc = t.stats.to_dict()
+            d["counters"] = {k: svc.get(k, 0) for k in (
+                "retries", "degraded", "shed", "failures", "store_errors")}
+            storage: dict = {}
+            store = getattr(t.cache, "store", None)
+            if store is not None and hasattr(store, "stats"):
+                ss = store.stats()
+                for k in ("spill_errors", "spill_retries", "spill_last_error",
+                          "read_errors", "worker_deaths", "wal_append_errors"):
+                    if k in ss:
+                        storage[k] = ss[k]
+                cold = ss.get("cold_breaker")
+                if cold is not None:
+                    breakers["cold_tier"] = cold
+            if storage:
+                d["storage"] = storage
+            open_breakers = [name for name, b in breakers.items()
+                             if b.get("state") != "closed"]
+            degrading = bool(open_breakers) \
+                or d["counters"]["degraded"] > 0 \
+                or storage.get("spill_last_error") is not None
+            d["status"] = "degraded" if degrading else "ok"
+            d["open_breakers"] = open_breakers
+            return d
+        return {name: self.health(name) for name in self.tenants()}

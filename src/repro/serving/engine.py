@@ -14,6 +14,7 @@ import dataclasses
 import datetime as _dt
 import json
 import math
+import time
 from typing import Optional
 
 import jax
@@ -108,10 +109,17 @@ def _logsumexp(x):
 class CanonicalizerService:
     """NL -> signature through the in-framework LLM (NLCanonicalizer protocol)."""
 
-    def __init__(self, engine: ServingEngine, schema_name: str, prompt_header: str = ""):
+    def __init__(self, engine: ServingEngine, schema_name: str,
+                 prompt_header: str = "", deadline_s: Optional[float] = None):
         self.engine = engine
         self.schema_name = schema_name
         self.prompt_header = prompt_header
+        # soft per-call budget: the engine's decode loop is not preemptible,
+        # so the deadline is checked after the pass — an overrun batch
+        # reports structured timeout NLResults instead of burning the cache
+        # path on answers nobody is waiting for anymore
+        self.deadline_s = deadline_s
+        self.deadline_overruns = 0
 
     def canonicalize(self, text: str, now: Optional[_dt.date] = None) -> NLResult:
         return self.canonicalize_batch([text], now)[0]
@@ -122,7 +130,14 @@ class CanonicalizerService:
         decoded by one slot-batched prefill+decode pass of the engine (one
         model launch for a dashboard refresh's NL tiles, not one per tile)."""
         prompts = [f"{self.prompt_header}question: {t}\nsignature: " for t in texts]
+        t0 = time.perf_counter()
         outs = self.engine.generate(prompts, constrained=True)
+        if self.deadline_s is not None \
+                and (time.perf_counter() - t0) > self.deadline_s:
+            self.deadline_overruns += 1
+            return [NLResult(None, 0.0, "",
+                             f"canonicalizer deadline exceeded "
+                             f"({self.deadline_s:.3f}s)") for _ in texts]
         results = []
         for out in outs:
             raw = out["text"]

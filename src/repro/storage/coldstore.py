@@ -35,6 +35,7 @@ import numpy as np
 
 from ..core.signature import signature_from_json
 from ..core.table import ResultTable
+from ..resilience import faults
 from .manifest import DurableManifest
 
 __all__ = ["ColdTier", "payload_name"]
@@ -155,6 +156,10 @@ class ColdTier:
                 data = f.read()
         except OSError:
             return None
+        if faults.should_fire("storage.sha_corrupt"):
+            # chaos: bit-rot between write and read — the sha check below
+            # must turn this into a miss, never a served wrong table
+            data = data[:-1] + bytes([data[-1] ^ 0xFF]) if data else b"\x00"
         sha = rec.get("sha")
         if sha is not None and hashlib.sha256(data).hexdigest() != sha:
             return None

@@ -51,6 +51,8 @@ from typing import Optional
 from ..analysis.sanitizer import make_lock, note_blocking
 from ..core.cache import CacheEntry, advance_stamp
 from ..core.table import ResultTable
+from ..resilience import faults
+from ..resilience.primitives import CircuitBreaker, backoff_delays
 from .coldstore import ColdTier
 
 __all__ = ["TieredStore", "entry_meta"]
@@ -128,6 +130,18 @@ class TieredStore:
         self.spill_errors = 0  # guarded-by: self._lock
         self.payload_corrupt = 0  # guarded-by: self._lock
         self.deletes = 0  # guarded-by: self._lock
+        # resilience: spill/read retry budgets (set before traffic; read-only
+        # after), error surfacing, and the cold tier's availability breaker
+        self.spill_attempts = 3
+        self.read_attempts = 3
+        self.spill_retries = 0  # guarded-by: self._lock
+        self.spill_last_error: Optional[str] = None  # guarded-by: self._lock
+        self.worker_deaths = 0  # guarded-by: self._lock
+        self.wal_append_errors = 0  # guarded-by: self._lock
+        self.read_errors = 0  # guarded-by: self._lock
+        # leaf lock of its own: safe to consult under self._lock, never the
+        # other way round
+        self.cold_breaker = CircuitBreaker("cold_tier", recovery_s=0.25)
 
     # -------------------------------------------------------------- open
     def open(self) -> list[CacheEntry]:
@@ -161,16 +175,22 @@ class TieredStore:
                     and rec.get("version") == entry.version
                     and rec.get("snapshot_id") == entry.snapshot_id
                     and key not in self._pending):
-                self._tier.meta_record(key, meta)
-                self.spill_meta_only += 1
-                return
+                try:
+                    self._tier.meta_record(key, meta)
+                    self.spill_meta_only += 1
+                    return
+                except Exception:  # noqa: BLE001 — WAL append failed (disk
+                    # full, injected IO fault): fall through to a full
+                    # pending job so the payload path's retry machinery owns
+                    # this version's durability instead of silently losing it
+                    self.wal_append_errors += 1
             job = _Spill(entry, table, meta)
             self._pending[key] = job
             if self.async_spill:
                 self._queue.put(key)
                 self._ensure_worker()
                 return
-        self._write_job(key, job)
+        self._write_job_with_retry(key, job)
 
     def _ensure_worker(self) -> None:  # requires-lock: self._lock
         if self._worker is None or not self._worker.is_alive():
@@ -183,17 +203,53 @@ class TieredStore:
             key = self._queue.get()
             if key is _STOP:
                 return
+            if faults.should_fire("storage.spill_death"):
+                # chaos: the worker thread dies mid-shift.  The claim stays
+                # pending and the key is requeued, so the replacement worker
+                # (restarted by the next spill()/flush()) picks it up — a
+                # worker death costs latency, never a lost write
+                self._queue.put(key)
+                with self._lock:
+                    self.worker_deaths += 1
+                return
             with self._lock:
                 job = self._pending.get(key)
             if job is None:
                 continue  # cancelled (delete/purge) before we got to it
+            self._write_job_with_retry(key, job)
+
+    def _write_job_with_retry(self, key: str, job: _Spill) -> bool:
+        """Attempt the durable write up to ``spill_attempts`` times with
+        deterministic backoff, abandoning early when the claim is superseded
+        or cancelled.  Only after the budget is spent does the claim drop —
+        with the error surfaced in ``spill_errors`` / ``spill_last_error``,
+        never swallowed.  Returns True on a landed write."""
+        attempts = max(self.spill_attempts, 1)
+        delays = backoff_delays(attempts, 0.002, 0.05, salt=key)
+        err: Optional[BaseException] = None
+        for attempt in range(attempts):
             try:
+                faults.fire_os("storage.spill_error")
                 self._write_job(key, job)
-            except Exception:
+                return True
+            except Exception as e:  # noqa: BLE001 — retried IO boundary
+                err = e
                 with self._lock:
-                    self.spill_errors += 1
-                    if self._pending.get(key) is job:
-                        del self._pending[key]
+                    if self._pending.get(key) is not job:
+                        # a newer spill or a delete owns the key now; its
+                        # write (or tombstone) supersedes this one
+                        self.spill_superseded += 1
+                        return False
+                    if attempt + 1 < attempts:
+                        self.spill_retries += 1
+                if attempt + 1 < attempts:
+                    time.sleep(delays[attempt])
+        with self._lock:
+            self.spill_errors += 1
+            self.spill_last_error = f"{type(err).__name__}: {err}"
+            if self._pending.get(key) is job:
+                del self._pending[key]
+        return False
 
     def _write_job(self, key: str, job: _Spill) -> None:
         """Payload IO outside the lock; finalize under it.  The claim check
@@ -217,7 +273,29 @@ class TieredStore:
     # -------------------------------------------------------------- read
     def peek(self, key: str) -> Optional[ResultTable]:
         """Read a table back without consuming the record: pending claim
-        first (freshest state), then disk with sha verification."""
+        first (freshest state), then disk with sha verification.  An
+        unreadable, unavailable, or damaged payload is a miss — never a
+        false hit, never an exception."""
+        try:
+            return self._read_payload(key)
+        except OSError:
+            return None
+
+    def promote(self, key: str) -> Optional[ResultTable]:
+        """Like :meth:`peek`, but distinguishes *transient* unavailability
+        (IO errors exhausted the retry budget, or the cold breaker is open —
+        raises ``OSError``) from *damage* (sha mismatch — returns ``None``),
+        so the cache keeps the cold entry across an outage instead of
+        dropping a clean durable replica."""
+        return self._read_payload(key)
+
+    def _read_payload(self, key: str) -> Optional[ResultTable]:
+        """Shared read path: pending claim first (freshest state), then disk
+        behind the cold tier's circuit breaker with a bounded micro-retry
+        (reads can execute under a shard lock, so the worst-case added hold
+        time stays a few milliseconds).  Returns the table, ``None`` for a
+        missing/damaged payload, raises ``OSError`` when the tier is
+        transiently unavailable."""
         with self._lock:
             job = self._pending.get(key)
             if job is not None:
@@ -225,14 +303,28 @@ class TieredStore:
             rec = self._tier.record(key)
         if rec is None:
             return None
-        table = self._tier.read_payload(rec)
-        if table is None:
-            with self._lock:
-                self.payload_corrupt += 1
-        return table
-
-    # promotion leaves the durable record in place (clean cold replica)
-    promote = peek
+        if not self.cold_breaker.allow():
+            # fail fast while the cold tier is unavailable
+            raise OSError("cold tier circuit breaker open")
+        attempts = max(self.read_attempts, 1)
+        delays = backoff_delays(attempts, 0.001, 0.004, salt=key)
+        for attempt in range(attempts):
+            try:
+                faults.fire_os("coldtier.read_error")
+                table = self._tier.read_payload(rec)
+            except OSError:
+                with self._lock:
+                    self.read_errors += 1
+                if attempt + 1 < attempts:
+                    time.sleep(delays[attempt])
+                continue
+            self.cold_breaker.record_success()
+            if table is None:
+                with self._lock:
+                    self.payload_corrupt += 1
+            return table
+        self.cold_breaker.record_failure()
+        raise OSError(f"cold read failed after {attempts} attempts")
 
     def has(self, key: str) -> bool:
         with self._lock:
@@ -272,6 +364,15 @@ class TieredStore:
         while True:
             with self._lock:
                 busy = bool(self._pending)
+                if busy and self.async_spill and not self._closed and (
+                        self._worker is None or not self._worker.is_alive()):
+                    # the worker died (crash or injected storage.spill_death)
+                    # with claims outstanding: requeue them (duplicates are
+                    # harmless — the loop re-checks each claim) and restart
+                    # it, so a dead worker can never wedge flush()
+                    for k in self._pending:
+                        self._queue.put(k)
+                    self._ensure_worker()
             if not busy:
                 return True
             if time.monotonic() > deadline:
@@ -308,8 +409,14 @@ class TieredStore:
                 "spill_meta_only": self.spill_meta_only,
                 "spill_superseded": self.spill_superseded,
                 "spill_errors": self.spill_errors,
+                "spill_retries": self.spill_retries,
+                "spill_last_error": self.spill_last_error,
+                "worker_deaths": self.worker_deaths,
+                "wal_append_errors": self.wal_append_errors,
+                "read_errors": self.read_errors,
                 "payload_corrupt": self.payload_corrupt,
                 "deletes": self.deletes,
                 "log_records": self._tier.manifest.log_records,
                 "torn_records": self._tier.manifest.torn_records,
+                "cold_breaker": self.cold_breaker.snapshot(),
             }

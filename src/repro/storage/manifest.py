@@ -32,10 +32,13 @@ registered in the analysis annotations as externally synchronized).
 """
 from __future__ import annotations
 
+import errno
 import json
 import os
 import zlib
 from typing import Iterable, Optional
+
+from ..resilience import faults
 
 __all__ = ["DurableManifest", "CHECKPOINT_NAME", "LOG_NAME"]
 
@@ -81,13 +84,27 @@ class DurableManifest:
 
     # ------------------------------------------------------------- append
     def append(self, record: dict) -> None:
-        """Durably append one log record (op defaults to ``put``)."""
+        """Durably append one log record (op defaults to ``put``).
+
+        Chaos injection points (deterministic, via ``REPRO_FAULTS``):
+        ``storage.wal_enospc`` / ``storage.wal_oserror`` raise before any
+        byte lands (disk full / generic IO failure); ``storage.wal_torn``
+        writes *half* a frame then raises — the kill-mid-append case replay
+        must skip as a torn tail."""
+        faults.fire_os("storage.wal_enospc", err_no=errno.ENOSPC)
+        faults.fire_os("storage.wal_oserror")
         rec = dict(record)
         rec.setdefault("op", "put")
         rec["crc"] = _crc_payload(rec)
         line = json.dumps(rec, sort_keys=True, separators=(",", ":")) + "\n"
         if self._fh is None:
             self._fh = open(self.log_path, "a", encoding="utf-8")
+        if faults.should_fire("storage.wal_torn"):
+            self._fh.write(line[:max(len(line) // 2, 1)])
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+            raise OSError("injected fault: storage.wal_torn (half frame)")
         self._fh.write(line)
         self._fh.flush()
         if self.fsync:

@@ -7,6 +7,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks 
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True)
+def _clear_faults():
+    """No chaos plan leaks across tests: deactivate any installed fault plan
+    (and reset the env-plan cache/counters) after every test."""
+    yield
+    from repro.resilience import faults
+
+    faults.clear()
+
+
 @pytest.fixture(scope="session")
 def ssb_small():
     from repro.workloads import ssb

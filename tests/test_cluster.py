@@ -15,6 +15,7 @@ from repro.core import MemoizedNL, SemanticCache, SimulatedLLM
 from repro.core.sql_canon import SQLCanonicalizer
 from repro.core.table import ResultTable
 from repro.olap.executor import OlapExecutor
+from repro.resilience import ResiliencePolicy, faults
 from repro.service import CacheService, QueryRequest
 
 JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
@@ -193,9 +194,10 @@ class TestDifferentialOracle:
 
 
 class TestSingleFlight:
-    def _storm(self, wl, backend, n_threads, sql):
+    def _storm(self, wl, backend, n_threads, sql, **tenant_kw):
         svc = CacheService()
-        svc.register_tenant("t", schema=wl.schema, backend=backend, shards=4)
+        svc.register_tenant("t", schema=wl.schema, backend=backend, shards=4,
+                            **tenant_kw)
         results = [None] * n_threads
         errors = [None] * n_threads
         barrier = threading.Barrier(n_threads)
@@ -238,16 +240,109 @@ class TestSingleFlight:
 
     def test_leader_failure_releases_followers(self, ssb_small):
         """A crashed leader must not strand followers: the flight is failed,
-        waiters wake and execute the query themselves."""
+        waiters wake and execute the query themselves.  The leader itself
+        resolves to a *structured* error result — containment means no raw
+        exception ever escapes the pipeline."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.05, fail_first=True)
+        svc, results, errors = self._storm(
+            ssb_small, be, 4, sql_region("COUNT(*) AS n"),
+            # one attempt: with the default retry budget the leader would
+            # simply recover on its second try (fail_first fails only once)
+            resilience=ResiliencePolicy(execute_attempts=1))
+        assert errors == [None] * 4  # no raw exceptions, ever
+        failed = [r for r in results if r.status == "error"]
+        served = [r for r in results if r.status == "miss"]
+        assert len(failed) == 1  # the leader reports its backend error
+        assert failed[0].error is not None
+        assert failed[0].error.stage == "execute"
+        assert failed[0].table is None
+        assert len(served) == 3
+        assert all(r.table is not None for r in served)
+
+    def test_leader_failure_with_retries_recovers(self, ssb_small):
+        """Default policy: a transient first-call failure is retried with
+        backoff and the whole storm succeeds — one visible retry, zero
+        errors."""
         be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
                              stall_s=0.05, fail_first=True)
         svc, results, errors = self._storm(
             ssb_small, be, 4, sql_region("COUNT(*) AS n"))
-        failed = [e for e in errors if e is not None]
-        served = [r for r in results if r is not None]
-        assert len(failed) == 1  # the leader propagates its backend error
-        assert len(served) == 3
-        assert all(r.status == "miss" and r.table is not None for r in served)
+        assert errors == [None] * 4
+        assert all(r.status == "miss" and r.table is not None for r in results)
+        t = svc.tenant("t")
+        assert t.stats.retries >= 1
+        assert t.stats.failures == 0
+
+    def test_leader_death_chaos_followers_fall_back(self, ssb_small, canon):
+        """Injected ``flight.leader_death`` (the chaos harness's post-compute,
+        pre-publish crash): the leader resolves to a structured error, its
+        flight is failed, and followers that coalesced onto it self-execute —
+        producing tables bit-identical to a direct backend run.  Zero false
+        hits: the cache ends up holding the *correct* table."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.2)
+        svc = CacheService()
+        svc.register_tenant("t", schema=ssb_small.schema, backend=be, shards=4,
+                            resilience=ResiliencePolicy(serve_stale=False))
+        sql = sql_region("SUM(lo_revenue) AS r")
+        out = {}
+
+        def leader():
+            out["leader"] = svc.submit(QueryRequest(sql=sql, tenant="t"))
+
+        def follower(i):
+            time.sleep(0.05)  # join the flight while the leader is mid-execute
+            out[i] = svc.submit(QueryRequest(sql=sql, tenant="t"))
+
+        with faults.scoped("flight.leader_death:1.0"):
+            # rate 1.0 is still deterministic here: the death point only
+            # draws for flight-*leader* groups, and the follower fallbacks
+            # run leaderless (their flight already failed)
+            ts = [threading.Thread(target=leader)] + [
+                threading.Thread(target=follower, args=(i,)) for i in range(2)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+
+        dead = out["leader"]
+        assert dead.status == "error" and dead.table is None
+        assert dead.error is not None and dead.error.kind == "fault"
+        assert "flight.leader_death" in dead.error.message
+        ref = OlapExecutor(ssb_small.dataset, impl="numpy").execute(
+            canon.canonicalize(sql))
+        for i in range(2):
+            r = out[i]
+            assert r.status == "miss"
+            assert "execute:flight_fallback" in r.provenance
+            assert r.table is not None and r.table.equals(ref)
+        # the fallback stored a correct table: the next request is a true hit
+        after = svc.submit(QueryRequest(sql=sql, tenant="t"))
+        assert after.status == "hit_exact" and after.table.equals(ref)
+        assert be.calls == 3  # leader + two independent fallbacks, no more
+
+    def test_leader_death_storm_zero_false_hits(self, ssb_small, canon):
+        """Chaos storm at 50% leader-death rate: containment holds (no raw
+        exceptions), every non-error response carries the bit-identical
+        correct table — degraded availability never becomes a wrong answer."""
+        be = CountingBackend(OlapExecutor(ssb_small.dataset, impl="numpy"),
+                             stall_s=0.02)
+        with faults.scoped("flight.leader_death:0.5:5"):
+            svc, results, errors = self._storm(
+                ssb_small, be, 8, sql_region("COUNT(*) AS n"),
+                resilience=ResiliencePolicy(serve_stale=False))
+        assert errors == [None] * 8
+        ref = OlapExecutor(ssb_small.dataset, impl="numpy").execute(
+            canon.canonicalize(sql_region("COUNT(*) AS n")))
+        statuses = {r.status for r in results}
+        assert statuses <= {"miss", "hit_exact", "error"}
+        for r in results:
+            if r.status == "error":
+                assert r.table is None and "leader_death" in r.error.message
+            else:
+                assert r.table is not None and r.table.equals(ref)
+        assert any(r.status != "error" for r in results)  # someone got served
 
     def test_flight_api_joins_and_completes(self, ssb_small, canon, backend):
         cluster = mk_cluster(ssb_small, 2)

@@ -17,6 +17,7 @@ from repro.core.sql_canon import SQLCanonicalizer
 from repro.core.table import ResultTable
 from repro.olap.executor import OlapExecutor
 from repro.storage import policy as storage_policy
+from repro.resilience import faults
 from repro.storage.coldstore import ColdTier, payload_name
 from repro.storage.engine import TieredStore, entry_meta
 from repro.storage.manifest import DurableManifest
@@ -663,4 +664,225 @@ class TestClusterTiered:
         for s, t in qt:
             lr = warm.lookup(s)
             assert lr.status == "hit_exact" and lr.table.equals(t)
+        store2.close()
+
+
+# ------------------------------------------------------------ chaos harness
+
+
+class TestChaosHarness:
+    """Satellite: deterministic fault-injection (REPRO_FAULTS points) against
+    the durable tier — WAL write failures mid-save, torn frames, payload
+    corruption and transient read outages.  Every scenario must degrade to a
+    miss or a retried success, never a false hit, never a lost prefix."""
+
+    def _attached(self, env, tmp_path):
+        wl, canon, backend = env
+        qt = year_queries(canon, backend)
+        root = str(tmp_path / "store")
+        store = TieredStore(root)
+        store.open()
+        cache = fresh_cache(wl, write_through=True)
+        cache.attach_store(store)
+        return qt, root, store, cache
+
+    def test_wal_enospc_mid_save_recovers_prefix(self, env, tmp_path):
+        """Disk-full (injected ENOSPC on every WAL append) midway through a
+        save: the writes before the outage survive, the writes during it are
+        surfaced as spill errors — and a reopen recovers exactly the longest
+        consistent prefix, bit-identical."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        for s, t in qt[:3]:
+            cache.put(s, t)
+        assert store.flush()
+        with faults.scoped("storage.wal_enospc:1.0"):
+            for s, t in qt[3:]:
+                cache.put(s, t)
+            assert store.flush()  # claims drained (dropped after retries)
+            st = store.stats()
+            assert st["spill_errors"] == 3
+            assert st["spill_retries"] == 6  # two retries per failed key
+            assert "storage.wal_enospc" in st["spill_last_error"]
+        # the hot tier still serves everything; nothing raised
+        for s, t in qt:
+            lr = cache.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+        store2 = TieredStore(root)
+        adopted = store2.open()
+        assert {e.signature.key() for e in adopted} == \
+            {s.key() for s, _ in qt[:3]}
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        for s, t in qt[:3]:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+        for s, _ in qt[3:]:
+            assert warm.lookup(s).status == "miss"
+        store2.close()
+
+    def test_wal_oserror_is_retried_and_lands(self, env, tmp_path):
+        """A transient WAL OSError (fires on the first append only — seed 19
+        draws fire,clean,clean,... at rate 0.3) costs one retry; the write
+        still lands durably."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        with faults.scoped("storage.wal_oserror:0.3:19"):
+            cache.put(*qt[0])
+            assert store.flush()
+        st = store.stats()
+        assert st["spill_errors"] == 0
+        assert st["spill_retries"] == 1
+        assert st["spilled_writes"] == 1
+        store.close()
+        store2 = TieredStore(root)
+        assert {e.signature.key() for e in store2.open()} == {qt[0][0].key()}
+        store2.close()
+
+    def test_torn_wal_frame_skipped_on_replay(self, env, tmp_path):
+        """``storage.wal_torn`` writes half a frame then raises (a kill
+        mid-append): the retries exhaust, the torn garbage is skipped and
+        counted at replay, and the earlier records all survive."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        for s, t in qt[:3]:
+            cache.put(s, t)
+        assert store.flush()
+        with faults.scoped("storage.wal_torn:1.0"):
+            cache.put(*qt[3])
+            assert store.flush()
+            assert store.stats()["spill_errors"] == 1
+        store2 = TieredStore(root)
+        adopted = store2.open()
+        assert {e.signature.key() for e in adopted} == \
+            {s.key() for s, _ in qt[:3]}
+        assert store2.stats()["torn_records"] >= 1
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        for s, t in qt[:3]:
+            lr = warm.lookup(s)
+            assert lr.status == "hit_exact" and lr.table.equals(t)
+        store2.close()
+
+    def test_sha_corruption_under_chaos_is_miss_not_false_hit(self, env,
+                                                              tmp_path):
+        """``storage.sha_corrupt`` flips payload bytes at read time: the sha
+        gate refuses the table — a miss, never a wrong answer — and the
+        damaged entry is dropped rather than retried forever."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        for s, t in qt[:2]:
+            cache.put(s, t)
+        store.flush()
+        store.close()
+        store2 = TieredStore(root)
+        adopted = store2.open()
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        with faults.scoped("storage.sha_corrupt:1.0"):
+            assert warm.lookup(qt[0][0]).status == "miss"
+            assert store2.stats()["payload_corrupt"] == 1
+            assert qt[0][0].key() not in warm.cold_keys()
+        # undamaged entries keep serving bit-identically once chaos stops
+        lr = warm.lookup(qt[1][0])
+        assert lr.status == "hit_exact" and lr.table.equals(qt[1][1])
+        store2.close()
+
+    def test_transient_read_error_is_retried(self, env, tmp_path):
+        """One injected cold-read IO error (seed 12: fire,clean,... at rate
+        0.3) is absorbed by the peek micro-retry — the lookup still hits."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        cache.put(*qt[0])
+        store.flush()
+        store.close()
+        store2 = TieredStore(root)
+        adopted = store2.open()
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        with faults.scoped("coldtier.read_error:0.3:12"):
+            lr = warm.lookup(qt[0][0])
+        assert lr.status == "hit_exact" and lr.table.equals(qt[0][1])
+        st = store2.stats()
+        assert st["read_errors"] == 1
+        assert st["cold_breaker"]["state"] == "closed"
+        store2.close()
+
+    def test_cold_outage_opens_breaker_then_recovers(self, env, tmp_path):
+        """A sustained cold-tier outage: reads exhaust their retries, the
+        breaker opens (then fails fast, no disk churn), and — crucially — the
+        cold entries are *kept*, so after the recovery window a half-open
+        probe succeeds, the breaker closes, and the same key serves again."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        cache.put(*qt[0])
+        store.flush()
+        store.close()
+        store2 = TieredStore(root)
+        store2.cold_breaker.recovery_s = 0.1
+        adopted = store2.open()
+        warm = fresh_cache(wl)
+        warm.attach_store(store2, entries=adopted)
+        with faults.scoped("coldtier.read_error:1.0"):
+            for _ in range(5):  # failure_threshold: 5 exhausted reads
+                assert warm.lookup(qt[0][0]).status == "miss"
+            st = store2.stats()
+            assert st["cold_breaker"]["state"] == "open"
+            assert st["read_errors"] == 15  # 3 attempts x 5 reads
+            # open breaker fails fast: the next miss touches no disk
+            assert warm.lookup(qt[0][0]).status == "miss"
+            st = store2.stats()
+            assert st["read_errors"] == 15
+            assert st["cold_breaker"]["rejections"] >= 1
+            # the replica was never dropped during the outage
+            assert qt[0][0].key() in warm.cold_keys()
+        time.sleep(0.15)  # recovery window, chaos over
+        lr = warm.lookup(qt[0][0])
+        assert lr.status == "hit_exact" and lr.table.equals(qt[0][1])
+        assert store2.stats()["cold_breaker"]["state"] == "closed"
+        store2.close()
+
+    def test_spill_worker_death_never_loses_the_write(self, env, tmp_path):
+        """``storage.spill_death`` kills the async spill worker mid-shift
+        (seed 132: first dequeue only).  The claim is requeued, flush()
+        restarts the worker, and every write lands durably."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        with faults.scoped("storage.spill_death:0.3:132"):
+            for s, t in qt[:2]:
+                cache.put(s, t)
+            assert store.flush()
+        st = store.stats()
+        assert st["worker_deaths"] == 1
+        assert st["spill_errors"] == 0
+        store.close()
+        store2 = TieredStore(root)
+        assert {e.signature.key() for e in store2.open()} == \
+            {s.key() for s, _ in qt[:2]}
+        store2.close()
+
+    def test_spill_error_retry_then_exhaustion_surfaced(self, env, tmp_path):
+        """``storage.spill_error`` at the payload-write boundary: a single
+        transient fault (seed 4) is retried and lands; a hard outage (rate
+        1.0) is surfaced in spill_errors/spill_last_error and tier_stats —
+        never silently swallowed."""
+        wl, canon, backend = env
+        qt, root, store, cache = self._attached(env, tmp_path)
+        with faults.scoped("storage.spill_error:0.3:4"):
+            cache.put(*qt[0])
+            assert store.flush()
+        assert store.stats()["spill_retries"] == 1
+        assert store.stats()["spill_errors"] == 0
+        with faults.scoped("storage.spill_error:1.0"):
+            cache.put(*qt[1])
+            assert store.flush()
+        st = store.stats()
+        assert st["spill_errors"] == 1
+        assert "storage.spill_error" in st["spill_last_error"]
+        ts = cache.tier_stats()
+        assert ts["store"]["spill_errors"] == 1
+        assert "storage.spill_error" in ts["store"]["spill_last_error"]
+        store.close()
+        store2 = TieredStore(root)
+        assert {e.signature.key() for e in store2.open()} == {qt[0][0].key()}
         store2.close()
