@@ -1,0 +1,269 @@
+"""Observability-plane benchmark: overhead and trace completeness.
+
+Two experiments:
+
+* **Warm-hit overhead** — the same warm-hit stream runs under four arms:
+  observability fully off (the control), metrics-only (the production
+  default: exposition mirrors existing counters, nothing on the hot path),
+  full tracing at the default head-based sample rate (1%, the gated arm),
+  and the whole plane (tracing + the cache audit log, informational).
+  Arms are interleaved rep-by-rep so drift hits them all equally, and the
+  headline is the min across per-rep p50s (like ``timeit``: arms differ
+  only in code, so noise can only inflate a rep — the lowest one is the
+  best estimate of intrinsic cost).  Acceptance: full tracing costs <= 5%
+  on warm-hit p50 vs obs-off.
+
+* **Trace completeness** — with every request sampled (rate 1.0), a mixed
+  cold/warm/derivation stream over a sharded cluster with a durable store
+  and a partition-parallel backend must produce, for every result, a span
+  for every pipeline stage its provenance proves it passed through
+  (:func:`repro.obs.trace_completeness`) — once clean, and once under an
+  injected fault plan (backend errors + latency + spill faults).
+  Acceptance: zero missing spans in both runs.
+
+Writes ``BENCH_obs.json``.
+
+    PYTHONPATH=src python benchmarks/bench_obs.py           # full run
+    PYTHONPATH=src python benchmarks/bench_obs.py --quick   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import statistics
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np  # noqa: E402
+
+JOINS = ("JOIN customer ON lineorder.lo_custkey = customer.c_key "
+         "JOIN dates ON lineorder.lo_orderdate = dates.d_key ")
+GROUPS = ("c_region", "c_nation", "c_city")
+MEASURES = ("SUM(lo_revenue) AS rev",
+            "SUM(lo_revenue) AS rev, COUNT(*) AS n",
+            "MIN(lo_supplycost) AS lo, MAX(lo_supplycost) AS hi")
+YEARS = (1992, 1993, 1994, 1995)
+
+CHAOS_PLAN = ("backend.error:0.15:11,backend.latency:0.05:13,"
+              "storage.spill_error:0.2:17,canonicalize.timeout:0.05:19")
+
+
+def build_population(n: int) -> list:
+    grid = [f"SELECT {g}, {m} FROM lineorder {JOINS}"
+            f"WHERE d_year = {y} GROUP BY {g}"
+            for y in YEARS for g in GROUPS for m in MEASURES]
+    return grid[:n]
+
+
+# ------------------------------------------------------- warm-hit overhead
+
+
+def make_service(wl, obs_cfg):
+    from repro.olap.executor import OlapExecutor
+    from repro.service import CacheService
+
+    svc = CacheService(obs=obs_cfg)
+    svc.register_tenant(
+        "t", schema=wl.schema,
+        backend=OlapExecutor(wl.dataset, impl="numpy"))
+    return svc
+
+
+def overhead_experiment(wl, queries, requests: int, reps: int) -> dict:
+    from repro.obs import ObsConfig
+    from repro.service import QueryRequest
+
+    arms = {
+        "off": ObsConfig.disabled(),
+        "metrics": ObsConfig(),  # the production default
+        "tracing": ObsConfig(tracing=True),  # + tracing at default 1%
+        "full_plane": ObsConfig.full(),  # + the audit log as well
+    }
+    services = {}
+    for name, cfg in arms.items():
+        svc = make_service(wl, cfg)
+        for q in queries:  # warm: every query resident before measuring
+            svc.submit(QueryRequest(sql=q, tenant="t"))
+        services[name] = svc
+
+    stream = [queries[i % len(queries)] for i in range(requests)]
+    p50s: dict[str, list[float]] = {name: [] for name in arms}
+    qps: dict[str, list[float]] = {name: [] for name in arms}
+    for rep in range(reps):
+        # interleave arms within each rep so machine drift (thermal, noisy
+        # neighbours) hits all three equally
+        for name, svc in services.items():
+            lat = []
+            t0 = time.perf_counter()
+            for q in stream:
+                t1 = time.perf_counter()
+                r = svc.submit(QueryRequest(sql=q, tenant="t"))
+                lat.append((time.perf_counter() - t1) * 1e3)
+                assert r.status == "hit_exact", r.status
+            wall = time.perf_counter() - t0
+            p50s[name].append(float(np.percentile(lat, 50)))
+            qps[name].append(len(stream) / wall)
+    out: dict = {"arms": {}}
+    for name in arms:
+        out["arms"][name] = {
+            # the gated headline is min-of-reps: like timeit, the lowest
+            # rep is the least-noise estimate of intrinsic cost (the arms
+            # only differ by code, so noise can only inflate a rep)
+            "p50_ms": round(min(p50s[name]), 5),
+            "p50_ms_median": round(statistics.median(p50s[name]), 5),
+            "p50_ms_reps": [round(v, 5) for v in p50s[name]],
+            "qps": round(statistics.median(qps[name]), 1),
+        }
+    base = out["arms"]["off"]["p50_ms"]
+    for name in ("metrics", "tracing", "full_plane"):
+        d = out["arms"][name]
+        d["overhead_pct_p50"] = round(100.0 * (d["p50_ms"] - base)
+                                      / base, 2) if base else 0.0
+    fp = services["full_plane"]
+    out["tracer"] = fp.obs.tracer.stats()
+    out["audit"] = fp.obs.audit.stats()
+    # the hard gate is the ISSUE's criterion: *full tracing* at default
+    # sampling <= 5% over obs-off (the audit log is its own layer; its
+    # all-on cost is reported above as the full_plane arm)
+    out["meets_5pct_criterion"] = bool(
+        out["arms"]["tracing"]["overhead_pct_p50"] <= 5.0)
+    return out
+
+
+# ------------------------------------------------------ trace completeness
+
+
+def completeness_run(wl, queries, requests: int, chaos: bool) -> dict:
+    from repro.obs import ObsConfig, trace_completeness
+    from repro.olap.executor import OlapExecutor
+    from repro.resilience import faults
+    from repro.service import CacheService, QueryRequest
+
+    root = tempfile.mkdtemp(prefix="bench_obs_")
+    svc = CacheService(obs=ObsConfig.full(sample_rate=1.0))
+    try:
+        svc.register_tenant(
+            "t", schema=wl.schema,
+            backend=OlapExecutor(wl.dataset, impl="numpy", partitions=2),
+            shards=2)
+        svc.open(root)
+        results = []
+        rng = np.random.default_rng(29)
+
+        def drive():
+            # mixed batches: cold misses, warm hits, in-batch duplicates
+            i = 0
+            while len(results) < requests:
+                size = int(rng.integers(1, 5))
+                batch = [QueryRequest(sql=queries[(i + j) % len(queries)],
+                                      tenant="t")
+                         for j in range(size)]
+                i += max(size - 1, 1)  # overlap: duplicates across batches
+                results.extend(svc.submit_batch(batch))
+
+        if chaos:
+            with faults.scoped(CHAOS_PLAN):
+                drive()
+        else:
+            drive()
+        comp = trace_completeness(results, svc.obs.tracer)
+        statuses: dict[str, int] = {}
+        for r in results:
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+        return {
+            "chaos": chaos,
+            "requests": len(results),
+            "statuses": statuses,
+            "traces_checked": comp["traces_checked"],
+            "missing_spans": comp["missing_count"],
+            "missing_detail": comp["missing"][:5],
+            "spans_emitted": svc.obs.tracer.stats()["spans_emitted"],
+            "audit_events": svc.obs.audit.stats()["emitted"],
+            "ok": comp["ok"],
+        }
+    finally:
+        svc.close()
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------- driver
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=40_000, help="SSB fact rows")
+    ap.add_argument("--population", type=int, default=18,
+                    help="distinct warm queries")
+    ap.add_argument("--requests", type=int, default=2_000,
+                    help="warm-hit requests per rep per arm")
+    ap.add_argument("--reps", type=int, default=7,
+                    help="interleaved measurement reps")
+    ap.add_argument("--completeness-requests", type=int, default=300)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 6k rows, shorter streams")
+    args = ap.parse_args()
+    if args.quick:
+        # plenty of reps even in quick mode: the gate compares sub-us p50
+        # deltas, and min-of-reps only shakes off noise if enough reps land
+        # on a quiet machine
+        args.rows, args.requests, args.reps = 6_000, 1_000, 9
+        args.completeness_requests = 150
+
+    from repro.workloads import ssb
+
+    print(f"building SSB: {args.rows:,} fact rows ...", flush=True)
+    wl = ssb.build(n_fact=args.rows, seed=0)
+    queries = build_population(args.population)
+
+    print(f"warm-hit overhead: {args.reps} reps x {args.requests} requests "
+          f"x 4 arms ...", flush=True)
+    ovh = overhead_experiment(wl, queries, args.requests, args.reps)
+    for name, d in ovh["arms"].items():
+        extra = (f", overhead {d['overhead_pct_p50']:+.2f}%"
+                 if "overhead_pct_p50" in d else "")
+        print(f"  {name:>10}: p50 {d['p50_ms']:.4f} ms, "
+              f"{d['qps']:,.0f} qps{extra}", flush=True)
+
+    print("trace completeness: clean run ...", flush=True)
+    clean = completeness_run(wl, queries, args.completeness_requests,
+                             chaos=False)
+    print(f"  {clean['traces_checked']} traces checked, "
+          f"{clean['missing_spans']} missing spans, "
+          f"{clean['spans_emitted']} spans emitted", flush=True)
+    print("trace completeness: chaos run ...", flush=True)
+    chaos = completeness_run(wl, queries, args.completeness_requests,
+                             chaos=True)
+    print(f"  {chaos['traces_checked']} traces checked, "
+          f"{chaos['missing_spans']} missing spans, statuses "
+          f"{chaos['statuses']}", flush=True)
+
+    report = {
+        "config": {"rows": args.rows, "population": args.population,
+                   "requests": args.requests, "reps": args.reps,
+                   "completeness_requests": args.completeness_requests,
+                   "quick": args.quick},
+        "overhead": ovh,
+        "completeness": {"clean": clean, "chaos": chaos,
+                         "zero_missing": bool(clean["ok"] and chaos["ok"])},
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if not report["completeness"]["zero_missing"]:
+        raise SystemExit("trace completeness violated: missing stage spans")
+    if not ovh["meets_5pct_criterion"]:
+        raise SystemExit(
+            f"full-tracing warm-hit p50 overhead was "
+            f"{ovh['arms']['tracing']['overhead_pct_p50']:+.2f}% (> +5%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,9 +29,11 @@ def main() -> None:
         ("table5", tables.table5_profiles),
         ("rq4", tables.rq4_derivations),
         ("birdlike", tables.birdlike_eval),
+        ("perf_trend", tables.perf_trend),
     ]
     if quick:
-        sections = [("table1", tables.table1_hitrate)]
+        sections = [("table1", tables.table1_hitrate),
+                    ("perf_trend", tables.perf_trend)]
     all_csv = []
     for name, fn in sections:
         t0 = time.perf_counter()

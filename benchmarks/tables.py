@@ -335,3 +335,89 @@ def birdlike_eval():
              f"accuracy {acc*100:.1f}% (correct {correct}, wrong {wrong}, "
              f"invalid {invalid}; paper: 51.3%)"]
     return lines, [("birdlike_accuracy", dt_us, f"{acc*100:.1f}%")]
+
+
+# ------------------------------------------------------ cross-PR perf trend
+
+
+def _trend_extractors():
+    """One headline metric (or a few) per subsystem bench — the keys each
+    ``BENCH_*.json`` was gated on when its PR landed."""
+    def g(d, *path, default=None):
+        for p in path:
+            if not isinstance(d, dict) or p not in d:
+                return default
+            d = d[p]
+        return d
+
+    return {
+        "backend": lambda d: [
+            ("fused kernel speedup", f"{g(d, 'fused_speedup'):.1f}x"),
+            ("batch speedup", f"{g(d, 'batch_speedup'):.1f}x")],
+        "frontend": lambda d: [
+            ("SQL canonicalize qps speedup",
+             f"{g(d, 'speedup_sql_qps'):.1f}x")],
+        "service": lambda d: [
+            ("incremental refresh speedup",
+             f"{g(d, 'speedup_refresh'):.2f}x")],
+        "refresh": lambda d: [
+            ("warm refresh speedup", f"{g(d, 'speedup_warm'):.1f}x")],
+        "cluster": lambda d: [
+            ("4-shard vs 1-shard speedup",
+             f"{g(d, 'speedup_4shard_vs_1shard'):.2f}x")],
+        "scan": lambda d: [
+            ("4-partition scan speedup",
+             f"{g(d, 'speedup_4_partitions'):.2f}x")],
+        "store": lambda d: [
+            ("warm-restart reach fraction",
+             f"{g(d, 'warm_restart', 'warm_reach_fraction'):.3f}"),
+            ("cost-policy hit-bytes ratio vs LRU",
+             f"{g(d, 'policy_ab', 'hit_bytes_ratio'):.2f}x")],
+        "faults": lambda d: [
+            ("availability at 10% faults",
+             f"{g(d, 'availability', 'availability_at_10pct') * 100:.1f}%"),
+            ("breaker open->served",
+             f"{g(d, 'breaker_recovery', 'open_to_served_ms'):.0f}ms")],
+        "obs": lambda d: [
+            ("full-tracing warm-hit p50 overhead",
+             f"{g(d, 'overhead', 'arms', 'tracing', 'overhead_pct_p50'):+.2f}%"),
+            ("trace completeness (clean+chaos)",
+             "zero missing" if g(d, 'completeness', 'zero_missing')
+             else "MISSING SPANS")],
+    }
+
+
+def perf_trend(root=None):
+    """Cross-PR performance trend: the headline metric from every
+    subsystem's ``BENCH_*.json`` in one table, so a regression in any
+    earlier PR's gated number is visible at a glance."""
+    import json
+    import os
+
+    if root is None:
+        root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    extractors = _trend_extractors()
+    lines = ["## Cross-PR performance trend (headline per subsystem bench)",
+             "| Bench | Metric | Value |", "|---|---|---|"]
+    csv = []
+    found = 0
+    for name in sorted(extractors):
+        path = os.path.join(root, f"BENCH_{name}.json")
+        if not os.path.exists(path):
+            lines.append(f"| {name} | (BENCH_{name}.json not found — "
+                         f"run benchmarks/bench_{name}.py) | — |")
+            continue
+        found += 1
+        with open(path) as f:
+            data = json.load(f)
+        try:
+            rows = extractors[name](data)
+        except (TypeError, ValueError):  # stale schema from an older run
+            lines.append(f"| {name} | (unrecognized report schema) | — |")
+            continue
+        for metric, value in rows:
+            lines.append(f"| {name} | {metric} | {value} |")
+            csv.append((f"trend_{name}_{metric.split()[0]}", 0.0, value))
+    lines.append("")
+    lines.append(f"({found}/{len(extractors)} subsystem benches present)")
+    return lines, csv

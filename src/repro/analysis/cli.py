@@ -25,7 +25,7 @@ from . import immutability, lockcheck, lockorder
 from .findings import load_baseline, split_baseline, write_report
 
 DEFAULT_PACKAGES = ("cluster", "service", "olap", "core", "storage",
-                    "resilience")
+                    "resilience", "obs")
 
 
 def _repo_root() -> str:

@@ -135,6 +135,10 @@ class CacheCluster:
         # the topology lock: register that deterministic same-class order
         allow_same_class_order("CacheShard.lock")
         self._retired_stats = CacheStats()  # guarded-by: self._topology_lock
+        # obs-plane audit log, re-applied to every shard cache across
+        # reshards (set_audit / set_shards both hold the topology lock)
+        self._audit = None  # guarded-by: self._topology_lock
+        self._audit_labels: dict = {}  # guarded-by: self._topology_lock
         # rebound only by set_shards under the topology lock; lock-free
         # readers take a consistent list snapshot and re-validate routes
         # after acquiring the target shard's lock (see _shard_op)
@@ -353,6 +357,17 @@ class CacheCluster:
                         store, groups[i], write_through=write_through)
         return adopted
 
+    def set_audit(self, audit, **labels) -> None:
+        """Attach the obs plane's lifecycle audit log to every shard cache,
+        each labelled with its shard index (plus the caller's labels, e.g.
+        ``tenant=``).  Survives resharding: ``set_shards`` re-applies it."""
+        with self._topology_lock:
+            self._audit = audit
+            self._audit_labels = dict(labels)
+            for shard in self._shards:
+                with shard.lock:
+                    shard.cache.set_audit(audit, shard=shard.index, **labels)
+
     def detach_store(self) -> None:
         with self._topology_lock:
             self._store = None
@@ -460,6 +475,11 @@ class CacheCluster:
                     shard.cache.capacity = self._split(self.capacity, n)
                     shard.cache.capacity_bytes = self._split(
                         self.capacity_bytes, n)
+                    if self._audit is not None:
+                        # relabel before rebuild so shrink-induced evictions
+                        # are audited under the shard's new index
+                        shard.cache.set_audit(self._audit, shard=i,
+                                              **self._audit_labels)
                     shard.cache.rebuild(assign[i])
                 self._shards = new
             finally:

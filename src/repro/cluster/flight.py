@@ -29,7 +29,7 @@ DEFAULT_FLIGHT_TIMEOUT_S = 30.0
 class Flight:
     """One in-flight miss computation, shared by a leader and its followers."""
 
-    __slots__ = ("key", "shard", "table", "error", "_event")
+    __slots__ = ("key", "shard", "table", "error", "obs_ctx", "_event")
 
     def __init__(self, key: str, shard: "CacheShard"):
         self.key = key
@@ -39,6 +39,10 @@ class Flight:
         # after the event is set (publication happens-before the wait)
         self.table: Optional["ResultTable"] = None  # guarded-by: self.shard.lock
         self.error: Optional[BaseException] = None  # guarded-by: self.shard.lock
+        # the sampled leader's trace context (Trace, span_id): written only
+        # by the leader before it resolves the flight, read by followers
+        # after wait() returns — the event publication orders the accesses
+        self.obs_ctx: Optional[tuple] = None  # guarded-by: external[leader-writes-before-event, followers read after wait()]
         self._event = threading.Event()
 
     @property

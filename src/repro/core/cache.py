@@ -288,6 +288,45 @@ class SemanticCache:
         self._morgue: "OrderedDict[str, object]" = OrderedDict()
         self.morgue_capacity = 128
         self.stats = CacheStats()
+        # lifecycle audit log (repro.obs.audit.AuditLog); None = disabled,
+        # so every emission site pays one attribute load + None check.
+        # Label fields (tenant=..., shard=...) ride on every event.
+        self.audit = None
+        self._audit_labels: dict = {}
+
+    def set_audit(self, audit, **labels) -> None:
+        """Attach (or detach, with ``None``) the obs plane's cache-lifecycle
+        audit log.  ``labels`` (``tenant=...``, ``shard=...``) are stamped
+        onto every event this cache emits."""
+        self.audit = audit
+        self._audit_labels = dict(labels)
+
+    def _emit_audit(self, event: str, key: str, **fields) -> None:
+        # callers pre-check `self.audit is not None`: the disabled hot path
+        # never pays this call.  The record is built in place and appended
+        # directly (no kwargs re-splat) — `hit` rides the warm path, where
+        # this is a measurable share of request latency.
+        rec = {"ts": time.time(), "event": event, "key": key}
+        rec.update(self._audit_labels)
+        rec.update(fields)
+        self.audit.append(rec)
+
+    def _policy_inputs(self, e: CacheEntry, now: float) -> dict:
+        """The same per-entry policy inputs ``entries_summary`` reports —
+        attached to evict/demote audit events so ``python -m repro.obs
+        explain`` can narrate *why* the policy chose this victim."""
+        return {
+            "age_s": round(now - e.stored_at, 3),
+            "idle_s": round(now - e.last_used_at, 3),
+            "hits": e.hits,
+            "decayed_hits": round(
+                _policy.decayed_hits(e, now, self.hit_half_life_s), 4),
+            "cost_ms": e.cost_ms,
+            "nbytes": e.table_nbytes,
+            "score": round(
+                _policy.cost_benefit_score(e, now, self.hit_half_life_s), 6),
+            "policy": self._resolve_policy().name,
+        }
 
     # ------------------------------------------------------------------- api
     def __len__(self) -> int:
@@ -314,6 +353,17 @@ class SemanticCache:
             origin, snap = entry.origin, entry.snapshot_id
             self._touch(key, entry, request_origin)
             self.stats.hits_exact += 1
+            if self.audit is not None:
+                # built in place (no kwargs hop): this site rides the warm
+                # path, where every dict round-trip is measurable
+                rec = {"ts": time.time(), "event": "hit", "key": key}
+                rec.update(self._audit_labels)
+                rec["tier"] = tier or "hot"
+                rec["origin"] = origin
+                rec["snapshot"] = snap
+                rec["request_origin"] = request_origin
+                rec["hits"] = entry.hits
+                self.audit.append(rec)
             if tier == "cold":
                 self._enforce_capacity()
             return LookupResult("hit_exact", table, key, origin, snap,
@@ -374,6 +424,13 @@ class SemanticCache:
                   "compose": "hit_compose"}[kind]
         setattr(self.stats, f"hits_{kind}",
                 getattr(self.stats, f"hits_{kind}") + 1)
+        if self.audit is not None:
+            # key = the *requested* signature; src_key = the cached entry
+            # that served it (the false-hit audit checks src_key liveness)
+            self._emit_audit("derivation_hit", sig.key(), src_key=cand_key,
+                             derivation=kind, tier=tier or "hot",
+                             origin=origin, snapshot=snap,
+                             request_origin=request_origin)
         if tier == "cold":
             self._enforce_capacity()
         return LookupResult(status, derived, cand_key, origin, snap, tier=tier)
@@ -480,6 +537,10 @@ class SemanticCache:
             if ttl_s is not None:
                 e.ttl_s = ttl_s
             self._set_entry_bytes(e, table.nbytes())
+            if self.audit is not None:
+                self._emit_audit("put", key, overwrite=True, origin=origin,
+                                 snapshot=snapshot_id, nbytes=e.table_nbytes,
+                                 cost_ms=e.cost_ms, version=e.version)
             self._maybe_write_through(key, e)
             self._enforce_capacity()
             return key
@@ -493,6 +554,10 @@ class SemanticCache:
         self._seq_of[key] = self._seq
         self._index(key, sig)
         self.stats.stores += 1
+        if self.audit is not None:
+            self._emit_audit("put", key, overwrite=False, origin=origin,
+                             snapshot=snapshot_id, nbytes=e.table_nbytes,
+                             cost_ms=e.cost_ms, ttl_s=e.ttl_s)
         self._maybe_write_through(key, e)
         self._enforce_capacity()
         return key
@@ -529,6 +594,10 @@ class SemanticCache:
         for key in dropped:
             self._remove(key)
             self.stats.invalidations += 1
+            if self.audit is not None:
+                self._emit_audit("drop", key, reason="snapshot_invalidation",
+                                 updated_start=updated_start,
+                                 updated_end=updated_end)
         return len(dropped)
 
     def refresh_entry(
@@ -560,6 +629,10 @@ class SemanticCache:
             self.stats.refreshes += 1
         else:
             self.stats.refresh_fallbacks += 1
+        if self.audit is not None:
+            self._emit_audit("refresh", key, snapshot=snapshot_id,
+                             merged=merged, nbytes=e.table_nbytes,
+                             version=e.version)
         self._maybe_write_through(key, e)
         # delta merges grow tables (group unions), so a refresh can push the
         # cache over its byte budget just like a put
@@ -571,10 +644,15 @@ class SemanticCache:
             return False
         self._remove(key)
         self.stats.invalidations += 1
+        if self.audit is not None:
+            self._emit_audit("drop", key, reason="explicit_invalidation")
         return True
 
     def invalidate_schema_change(self) -> int:
         n = len(self._entries) + len(self._cold)
+        if self.audit is not None:
+            for key in list(self._entries) + list(self._cold):
+                self._emit_audit("drop", key, reason="schema_change")
         self._entries.clear()
         self._cold.clear()
         # a schema change makes stale tables structurally wrong, not merely
@@ -622,13 +700,18 @@ class SemanticCache:
         A resident table moves to the morgue first so degraded serving can
         still offer it, explicitly tagged, when the backend is down."""
         e = self._entries.get(key)
+        morgued = False
         if e is not None and e.table is not None:
             self._morgue[key] = e.table
             self._morgue.move_to_end(key)
             while len(self._morgue) > self.morgue_capacity:
                 self._morgue.popitem(last=False)
+            morgued = True
+        tier = "hot" if e is not None else "cold"
         self._remove(key)
         self.stats.ttl_expiries += 1
+        if self.audit is not None:
+            self._emit_audit("ttl_expiry", key, tier=tier, morgued=morgued)
 
     def peek_stale(self, sig: Signature):
         """A possibly-stale table for this exact signature, or None — the
@@ -640,12 +723,21 @@ class SemanticCache:
         key = sig.key()
         e = self._entries.get(key)
         if e is not None and e.table is not None:
+            if self.audit is not None:
+                self._emit_audit("stale_serve", key, source="hot",
+                                 snapshot=e.snapshot_id)
             return e.table
         if key in self._cold and self.store is not None:
             table = self.store.peek(key)
             if table is not None:
+                if self.audit is not None:
+                    self._emit_audit("stale_serve", key, source="cold",
+                                     snapshot=self._cold[key].snapshot_id)
                 return table
-        return self._morgue.get(key)
+        table = self._morgue.get(key)
+        if table is not None and self.audit is not None:
+            self._emit_audit("morgue_serve", key, source="morgue")
+        return table
 
     # -------------------------------------------------------------- tiering
     def _resolve_policy(self):
@@ -672,7 +764,7 @@ class SemanticCache:
         except OSError:
             return None  # unavailable, not damaged: keep the replica
         if table is None:
-            self._drop_cold(key)
+            self._drop_cold(key, reason="damaged_payload")
             return None
         del self._cold[key]
         self._cold_bytes -= e.table_nbytes
@@ -682,9 +774,12 @@ class SemanticCache:
         self._bytes += e.table_nbytes
         self._set_entry_bytes(e, table.nbytes())
         self.stats.promotions += 1
+        if self.audit is not None:
+            self._emit_audit("promote", key, nbytes=e.table_nbytes,
+                             hits=e.hits)
         return e
 
-    def _drop_cold(self, key: str) -> None:
+    def _drop_cold(self, key: str, reason: str = "cold_capacity") -> None:
         """Remove a cold-tier entry entirely (budget pressure or damage)."""
         e = self._cold.pop(key, None)
         if e is None:
@@ -696,6 +791,10 @@ class SemanticCache:
             self.store.delete(key)
         self.stats.cold_drops += 1
         self.stats.bytes_evicted += e.table_nbytes
+        if self.audit is not None:
+            self._emit_audit("evict", key, tier="cold", disposition="drop",
+                             reason=reason,
+                             **self._policy_inputs(e, time.monotonic()))
 
     def ensure_loaded(self, key: str) -> Optional[CacheEntry]:
         """The entry with its table resident, promoting from cold if needed
@@ -755,6 +854,10 @@ class SemanticCache:
             self._cold_bytes += e.table_nbytes
             self.stats.bytes_cold = self._cold_bytes
             self.stats.demotions += 1
+            if self.audit is not None:
+                self._emit_audit("demote", key, tier="hot",
+                                 reason="hot_capacity",
+                                 **self._policy_inputs(e, now))
             self.store.spill(key, e, table)
         else:
             self._unindex(key)
@@ -764,6 +867,10 @@ class SemanticCache:
                 self.store.delete(key)
             self.stats.bytes_evicted += e.table_nbytes
             self.stats.evictions += 1
+            if self.audit is not None:
+                self._emit_audit("evict", key, tier="hot",
+                                 disposition="drop", reason="hot_capacity",
+                                 **self._policy_inputs(e, now))
 
     def _enforce_cold_capacity(self) -> None:
         if self.cold_capacity_bytes is None or not self._cold:

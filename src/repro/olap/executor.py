@@ -55,6 +55,7 @@ from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError, SQLCanonicalizer
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
 from ..core.table import ResultTable
+from ..obs.trace import adopt, child_span, current_ctx
 from ..resilience import faults
 from ..kernels.seg_agg.ops import (seg_agg, seg_agg_batch_blocks,
                                    seg_agg_fused, seg_agg_masked)
@@ -503,10 +504,14 @@ class OlapExecutor:
         with self._count_lock:
             self.partitioned_scans += 1
         devices = self._scan_devices()
+        # capture the submitting thread's trace context so each partition
+        # worker's span hangs off the request's execute span (obs plane);
+        # None when the request is unsampled — adopt() is then a no-op
+        obs_ctx = current_ctx()
         jobs = [
             self._pool().submit(
                 self._scan_partition, p, chunks, psigs,
-                devices[p % len(devices)] if devices else None)
+                devices[p % len(devices)] if devices else None, obs_ctx)
             for p, chunks in enumerate(plan.chunks)]
         partials = [j.result() for j in jobs]  # [partition][sig] tables
         out = []
@@ -517,22 +522,28 @@ class OlapExecutor:
                 sig, scan_plane.finalize_partials(sig, pplan, merged)))
         return out
 
-    def _scan_partition(self, p: int, chunks, psigs, dev) -> list[ResultTable]:
+    def _scan_partition(self, p: int, chunks, psigs, dev,
+                        obs_ctx=None) -> list[ResultTable]:
         """One partition job: scan its chunks in order, pre-merging the
         per-chunk partial tables (merge is associative and fold-order
         independent, so two-level partition-then-global merging is exact).
         ``dev`` pins all of the partition's uploads and launches to one JAX
         device via the thread-local default-device context."""
-        # chaos: one partition worker fails while its siblings succeed — the
-        # whole batch must error (a merge over missing partials would be a
-        # silent wrong answer), and the caller's retry machinery re-runs it
-        faults.fire("backend.partial")
-        if dev is not None:
-            import jax
+        with adopt(obs_ctx), child_span(
+                "execute.partition",
+                attrs={"partition": p, "chunks": len(chunks),
+                       "sigs": len(psigs)}):
+            # chaos: one partition worker fails while its siblings succeed —
+            # the whole batch must error (a merge over missing partials would
+            # be a silent wrong answer), and the caller's retry machinery
+            # re-runs it
+            faults.fire("backend.partial")
+            if dev is not None:
+                import jax
 
-            with jax.default_device(dev):
-                return self._scan_chunks(p, chunks, psigs, dev)
-        return self._scan_chunks(p, chunks, psigs, None)
+                with jax.default_device(dev):
+                    return self._scan_chunks(p, chunks, psigs, dev)
+            return self._scan_chunks(p, chunks, psigs, None)
 
     def _scan_chunks(self, p: int, chunks, psigs, dev) -> list[ResultTable]:
         streaming = len(chunks) > 1

@@ -14,10 +14,10 @@ from __future__ import annotations
 import dataclasses
 import datetime as _dt
 import threading
-from collections import deque
 from typing import Any, Optional, Protocol, Sequence
 
 from ..analysis.sanitizer import make_lock, note_acquire, note_release
+from ..obs.metrics import LogHistogram
 from ..core.middleware import Backend
 from ..core.signature import Filter, OrderKey, Signature, TimeWindow
 from ..core.table import ResultTable
@@ -138,6 +138,10 @@ class QueryResult:
     # typed failure record for 'degraded'/'error' (and contained store
     # failures on otherwise-successful requests)
     error: Optional[FailureInfo] = None
+    # observability: set when the request was head-sampled — the id of its
+    # trace and of the request's root span in it
+    trace_id: Optional[str] = None
+    span_id: Optional[str] = None
 
     @property
     def hit(self) -> bool:
@@ -170,6 +174,9 @@ class QueryResult:
             d["source_snapshot"] = self.source_snapshot
         if self.error is not None:
             d["error"] = self.error.to_dict()
+        if self.trace_id is not None:
+            d["trace_id"] = self.trace_id
+            d["span_id"] = self.span_id
         if include_table and self.table is not None:
             d["table"] = {n: self.table.columns[n].tolist() for n in self.table.names}
         return d
@@ -288,18 +295,16 @@ class ReadWriteGate:
         return self._Side(self.acquire_write, self.release_write)
 
 
-STAGE_SAMPLE_WINDOW = 2048  # per-stage latency samples retained for percentiles
-
-
 @dataclasses.dataclass
 class TenantStats:
     """Per-tenant service counters (cache-level counters live in
     ``SemanticCache.stats``).  A superset of the legacy ``MiddlewareStats``
     fields so middleware shims can expose it unchanged.
 
-    ``stage_timings`` holds a bounded window of the most recent per-stage
-    wall times (the pipeline's ``timings_ms``) so ``stage_percentiles`` can
-    report front-end p50/p95 without unbounded growth.
+    ``stage_timings`` holds one log-bucketed :class:`LogHistogram` per
+    pipeline stage (constant memory, never forgets old samples — it replaced
+    the bounded sample deques) so ``stage_percentiles`` can report front-end
+    p50/p95, and ``CacheService.metrics()`` can export the full distribution.
 
     Thread safety: the service runs request batches on concurrent caller
     threads (the sharded-cluster regime), so counters are bumped through
@@ -344,27 +349,32 @@ class TenantStats:
     def record_stage_timings(self, timings_ms: dict[str, float]) -> None:
         with self._lock:
             for stage, ms in timings_ms.items():
-                window = self.stage_timings.get(stage)
-                if window is None:
-                    window = self.stage_timings[stage] = deque(
-                        maxlen=STAGE_SAMPLE_WINDOW)
-                window.append(ms)
+                h = self.stage_timings.get(stage)
+                if h is None:
+                    h = self.stage_timings[stage] = LogHistogram()
+                h.observe(ms)
 
     def stage_percentiles(self) -> dict[str, dict[str, float]]:
-        """p50/p95 per pipeline stage over the retained sample window."""
-        with self._lock:
-            windows = {stage: list(w) for stage, w in self.stage_timings.items()}
+        """p50/p95 per pipeline stage, from the stage histograms.  Quantiles
+        use the proper zero-indexed rank ``q * (n - 1)`` (the old sorted-
+        window ``int(len * 0.95)`` index overshot on small sample counts)."""
         out: dict[str, dict[str, float]] = {}
-        for stage, window in windows.items():
-            if not window:
+        for stage, h in self.stage_histograms().items():
+            if not h.count:
                 continue
-            v = sorted(window)
             out[stage] = {
-                "p50_ms": v[len(v) // 2],
-                "p95_ms": v[min(len(v) - 1, int(len(v) * 0.95))],
-                "n": len(v),
+                "p50_ms": h.quantile(0.5),
+                "p95_ms": h.quantile(0.95),
+                "n": h.count,
             }
         return out
+
+    def stage_histograms(self) -> dict[str, LogHistogram]:
+        """Consistent snapshots of the per-stage histograms — the metrics
+        registry adopts these wholesale at exposition time."""
+        with self._lock:
+            return {stage: h.snapshot()
+                    for stage, h in self.stage_timings.items()}
 
     def to_dict(self) -> dict:
         # field loop instead of dataclasses.asdict: the raw sample windows

@@ -61,6 +61,7 @@ from ..core.safety import gate_nl, verify_hit_time_window
 from ..core.signature import Signature
 from ..core.sql_canon import CanonicalizationError
 from ..core.sqlparse import SQLSyntaxError, UnsupportedQuery
+from ..obs.trace import Trace, adopt, span_ctx
 from ..resilience import faults
 from ..resilience.errors import FailureInfo, classify
 from ..resilience.primitives import Deadline, backoff_delays
@@ -103,6 +104,15 @@ class RequestState:
     deadline: Optional[Deadline] = None
     provenance: list = dataclasses.field(default_factory=list)
     timings: dict = dataclasses.field(default_factory=dict)
+    # observability: set when this request was head-sampled.  Stage spans
+    # are emitted at finalize time from ``timings``/``provenance`` (no
+    # second clock read per stage); ``stage_attrs`` collects extra span
+    # attributes stages want on their finalize-time span (adoption links,
+    # resilience outcomes)
+    trace: Optional[Trace] = None
+    trace_wall0: float = 0.0  # wall clock at trace start (span start_s base)
+    trace_t0: float = 0.0  # perf_counter at trace start (root span duration)
+    stage_attrs: dict = dataclasses.field(default_factory=dict)
 
     @property
     def pending(self) -> bool:
@@ -124,6 +134,26 @@ def run_pipeline(tenant: "Tenant", requests: list[QueryRequest]) -> list[QueryRe
     for s in states:
         if s.req.deadline_ms is not None:
             s.deadline = Deadline.after_ms(s.req.deadline_ms)
+    tracer = tenant.obs.tracer
+    if tracer.enabled and tracer.period:
+        # head-based sampling: the keep/drop decision is made before any
+        # span exists; unsampled requests then pay `s.trace is None` checks
+        # and nothing else.  The tracer's countdown is decremented inline
+        # (batch-at-once) because this sits on the warm-hit p50 path: the
+        # common not-due case is one integer subtract + compare, and only
+        # when a sample is due does the batch take the slow path below.
+        c = tracer.countdown = tracer.countdown - len(states)
+        if c <= 0:
+            # one sample per period boundary crossed, taken from the front
+            # of the batch (deterministic pacing, Tracer.start_trace
+            # semantics); the countdown carries the remainder forward
+            period = tracer.period
+            due = min(len(states), (-c) // period + 1)
+            tracer.countdown = c + due * period
+            for s in states[:due]:
+                s.trace = tracer.make_trace()
+                s.trace_wall0 = time.time()
+                s.trace_t0 = time.perf_counter()
     tenant.stats.bump(requests=len(states), batches=1)
     try:
         for name, stage in (("canonicalize", _stage_canonicalize),
@@ -380,6 +410,10 @@ def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
         if not s.pending:
             continue
         if s.req.refresh:
+            # zero-duration timing so the stage still shows up in stage
+            # histograms and gets its finalize-time span (the provenance
+            # token proves the request passed through lookup)
+            s.add_ms("lookup", 0.0)
             s.provenance.append("lookup:skipped_refresh")
             continue
         todo.append(s)
@@ -398,6 +432,12 @@ def _stage_lookup(tenant: "Tenant", states: list[RequestState]) -> None:
             _apply_lookup(tenant, s, lr)
             if s.pending:
                 s.flight, s.flight_leader = flight, leader
+                if leader and flight is not None and s.trace is not None:
+                    # publish the sampled leader's trace context on the
+                    # flight so followers (this batch or other threads) can
+                    # link their adoption back to the leader's trace; the
+                    # flight event publication orders the read
+                    flight.obs_ctx = s.trace.ctx()
         return
     for s in todo:
         t0 = time.perf_counter()
@@ -639,21 +679,33 @@ def _execute_group_guarded(tenant: "Tenant",
     delays = backoff_delays(attempts, pol.retry_base_s, pol.retry_max_s, salt)
     err: Optional[BaseException] = None
     retries_used = 0
-    for attempt in range(attempts):
-        try:
-            lat = faults.latency_s("backend.latency")
-            if lat:
-                time.sleep(lat)  # injected latency spike, not a failure
-            faults.fire("backend.error")
-            _execute_leader_group(tenant, group)
-            err = None
-            break
-        except Exception as e:  # noqa: BLE001 — containment boundary
-            err = e
-            if attempt + 1 < attempts:
-                retries_used += 1
-                tenant.stats.bump(retries=1)
-                time.sleep(delays[attempt])
+    # live span on the first sampled leader's trace: it publishes itself as
+    # this thread's current context, so the scan plane's partition spans and
+    # any write-behind spill hang under it; attrs are finalized before exit
+    trace = next((s.trace for s in group if s.trace is not None), None)
+    eattrs: dict = {"leaders": len(group)}
+    with span_ctx(trace, "execute.backend",
+                  parent_id=trace.root_id if trace is not None else None,
+                  attrs=eattrs):
+        for attempt in range(attempts):
+            try:
+                lat = faults.latency_s("backend.latency")
+                if lat:
+                    time.sleep(lat)  # injected latency spike, not a failure
+                faults.fire("backend.error")
+                _execute_leader_group(tenant, group)
+                err = None
+                break
+            except Exception as e:  # noqa: BLE001 — containment boundary
+                err = e
+                if attempt + 1 < attempts:
+                    retries_used += 1
+                    tenant.stats.bump(retries=1)
+                    time.sleep(delays[attempt])
+        eattrs["retries"] = retries_used
+        eattrs["ok"] = err is None
+        if err is not None:
+            eattrs["error"] = f"{type(err).__name__}: {err}"
     if err is None and any(s.flight_leader for s in group) \
             and faults.should_fire("flight.leader_death"):
         # chaos: the single-flight leader dies *after* computing its result
@@ -728,6 +780,18 @@ def _resolve_follower(tenant: "Tenant", s: RequestState) -> None:
     ok = s.flight.wait(timeout)
     s.add_ms("plan", (time.perf_counter() - t0) * 1e3)
     s.deduped = True
+    lctx = getattr(s.flight, "obs_ctx", None)
+    if ok and lctx is not None:
+        # adoption link, both directions: the follower's plan span names
+        # the leader's trace/span, and (if sampled) the leader's trace gets
+        # a link span naming the follower's trace
+        ltrace, lspan = lctx
+        attrs = s.stage_attrs.setdefault("plan", {})
+        attrs["adopted_from_trace"] = ltrace.trace_id
+        attrs["adopted_from_span"] = lspan
+        ltrace.record("flight.adopt", parent_id=lspan, attrs={
+            "follower_trace": None if s.trace is None else s.trace.trace_id,
+            "key": s.flight.key})
     if ok and s.flight.ok and s.flight.table is not None:
         s.status = "miss"
         s.table = s.flight.table
@@ -748,13 +812,17 @@ def _resolve_follower(tenant: "Tenant", s: RequestState) -> None:
 def _store_state(tenant: "Tenant", s: RequestState) -> None:
     t0 = time.perf_counter()
     try:
-        tenant.cache.put(s.sig, s.table,
-                         origin="nl" if s.origin == "nl" else "sql",
-                         snapshot_id=tenant.snapshot_id,
-                         # recompute-cost estimate for the cost-benefit
-                         # eviction policy: what this entry's miss actually
-                         # paid to execute
-                         cost_ms=s.timings.get("execute", 0.0))
+        # adopt the request's root span as the thread context for the put:
+        # a write-behind spill enqueued inside lands its worker-side span
+        # under this trace (adopt(None) is a no-op shell)
+        with adopt(None if s.trace is None else s.trace.ctx()):
+            tenant.cache.put(s.sig, s.table,
+                             origin="nl" if s.origin == "nl" else "sql",
+                             snapshot_id=tenant.snapshot_id,
+                             # recompute-cost estimate for the cost-benefit
+                             # eviction policy: what this entry's miss
+                             # actually paid to execute
+                             cost_ms=s.timings.get("execute", 0.0))
     except Exception:  # noqa: BLE001 — a failed store must not fail the
         # request: the table is already in hand, the cache just stays cold
         s.add_ms("store", (time.perf_counter() - t0) * 1e3)
@@ -784,10 +852,77 @@ def _stage_store(tenant: "Tenant", states: list[RequestState]) -> None:
 # ----------------------------------------------------------------- finalize
 
 
+def _emit_trace(s: RequestState) -> None:
+    """Emit the sampled request's spans: one per pipeline stage it passed
+    through, plus the root.  Stage spans come from the union of recorded
+    ``timings`` and provenance-derived stage names (a failed execute that
+    never recorded a timing still proves its passage via provenance, and
+    the error's own stage is always covered), so trace completeness holds
+    by construction — including under injected chaos."""
+    tr = s.trace
+    by_stage: dict[str, list[str]] = {}
+    events: list[str] = []
+    for tok in s.provenance:
+        head = tok.split(":", 1)[0]
+        if head in STAGES:
+            by_stage.setdefault(head, []).append(tok)
+        else:
+            events.append(tok)  # resilience/audit tokens: retry, breaker,
+            # degraded, failure, snapshot, tier, bypass
+    stages = set(s.timings) | set(by_stage)
+    if s.error is not None and s.error.stage in STAGES:
+        stages.add(s.error.stage)
+    # stages are laid out sequentially from the request's start: per-stage
+    # starts were never recorded (tracing adds no clock reads to stages),
+    # durations are the pipeline's own perf_counter timings
+    cursor = s.trace_wall0
+    for stage in STAGES:
+        if stage not in stages:
+            continue
+        dur = s.timings.get(stage, 0.0)
+        attrs: dict = {}
+        if stage in by_stage:
+            attrs["outcomes"] = by_stage[stage]
+        extra = s.stage_attrs.get(stage)
+        if extra:
+            attrs.update(extra)
+        if s.error is not None and s.error.stage == stage:
+            attrs["failure_kind"] = s.error.kind
+            attrs["failure_message"] = s.error.message
+            attrs["degraded"] = s.error.degraded
+            if s.error.retries:
+                attrs["retries"] = s.error.retries
+            if s.error.breaker is not None:
+                attrs["breaker"] = s.error.breaker
+        if stage == "execute":
+            for tok in events:
+                if tok.startswith("retry:"):
+                    attrs.setdefault("retries", int(tok.split(":", 1)[1]))
+        tr.record(stage, parent_id=tr.root_id, start_s=cursor, dur_ms=dur,
+                  attrs=attrs)
+        cursor += dur / 1e3
+    root_attrs: dict = {
+        "status": s.status or "bypass",
+        "origin": s.origin,
+        "tenant": s.req.tenant,
+        "batched": s.batched,
+        "deduped": s.deduped,
+    }
+    if s.sig is not None:
+        root_attrs["key"] = s.sig.key()
+    if events:
+        root_attrs["events"] = events
+    tr.record("request", span_id=tr.root_id, start_s=s.trace_wall0,
+              dur_ms=(time.perf_counter() - s.trace_t0) * 1e3,
+              attrs=root_attrs)
+
+
 def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
     if s.status == "bypass":
         tenant.stats.bump(bypasses=1)
     tenant.stats.record_stage_timings(s.timings)
+    if s.trace is not None:
+        _emit_trace(s)
     return QueryResult(
         status=s.status or "bypass",
         table=s.table,
@@ -804,4 +939,6 @@ def _finalize(tenant: "Tenant", s: RequestState) -> QueryResult:
         batched=s.batched,
         deduped=s.deduped,
         error=s.error,
+        trace_id=None if s.trace is None else s.trace.trace_id,
+        span_id=None if s.trace is None else s.trace.root_id,
     )

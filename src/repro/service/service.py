@@ -31,6 +31,8 @@ from ..core.safety import SafetyPolicy
 from ..core.schema import StarSchema
 from ..core.sql_canon import SQLCanonicalizer
 from ..core.validator import SignatureValidator
+from ..obs import ObsConfig, ObsPlane
+from ..resilience import faults
 from ..resilience.policy import ResiliencePolicy, TenantResilience
 from .api import (DEFAULT_TENANT, Backend, QueryRequest, QueryResult,
                   ReadWriteGate, RefreshReport, TenantStats)
@@ -78,10 +80,13 @@ class Tenant:
     # recovery policy (retries, deadlines, stale-on-error)
     resilience: TenantResilience = dataclasses.field(
         default_factory=TenantResilience)
+    # observability plane, shared with the owning service (register_tenant
+    # overwrites the default); the pipeline reads its tracer per batch
+    obs: ObsPlane = dataclasses.field(default_factory=ObsPlane)
 
 
 class CacheService:
-    def __init__(self):
+    def __init__(self, obs: "Optional[ObsPlane | ObsConfig]" = None):
         # registration is rare but may race live traffic (an operator adding
         # a tenant while request threads resolve others): writes serialize
         # on _reg_lock; reads are lock-free dict probes (GIL-atomic)
@@ -91,6 +96,11 @@ class CacheService:
         # open(), cleared by close(); reads are lock-free like _tenants
         self._store_path: Optional[str] = None  # guarded-by: self._reg_lock
         self._write_through = True  # guarded-by: self._reg_lock
+        # one observability plane for the whole service: every tenant shares
+        # its tracer / metrics registry / audit log
+        if isinstance(obs, ObsConfig):
+            obs = ObsPlane(obs)
+        self.obs: ObsPlane = obs if obs is not None else ObsPlane()
 
     # ----------------------------------------------------------- tenants
     def register_tenant(
@@ -147,7 +157,12 @@ class CacheService:
             stats=TenantStats(),
             resilience=(resilience if resilience is not None
                         else TenantResilience()),
+            obs=self.obs,
         )
+        if self.obs.audit is not None:
+            set_audit = getattr(t.cache, "set_audit", None)
+            if set_audit is not None:
+                set_audit(self.obs.audit, tenant=name)
         with self._reg_lock:
             # check-then-insert must be one atomic step: two concurrent
             # registrations of the same name used to both pass the check
@@ -459,6 +474,137 @@ class CacheService:
             return d
         return {name: self.stats(name, include_entries=include_entries)
                 for name in self.tenants()}
+
+    # ------------------------------------------------------------ metrics
+    _BREAKER_STATES = {"closed": 0.0, "half_open": 1.0, "open": 2.0}
+
+    def metrics(self, fmt: str = "prometheus"):
+        """Exposition endpoint for the observability plane: mirror every
+        existing counter surface (per-tenant service counters, stage latency
+        histograms, cache counters, tier/store gauges, breaker states,
+        cluster shard gauges, fault-injection counters, the tracer's and
+        audit log's own counters) onto the shared
+        :class:`~repro.obs.MetricsRegistry`, then render it.
+
+        Mirroring happens here, at exposition time, from the sources of
+        truth that requests already maintain — the request hot path never
+        double-bumps a registry instrument.  ``fmt="prometheus"`` returns
+        the text exposition format (v0.0.4); ``fmt="json"`` a structured
+        dict."""
+        self._mirror_metrics()
+        reg = self.obs.registry
+        if fmt == "prometheus":
+            return reg.render_prometheus()
+        if fmt == "json":
+            return reg.render_json()
+        raise ValueError(f"unknown metrics format {fmt!r} "
+                         "(expected 'prometheus' or 'json')")
+
+    def _mirror_metrics(self) -> None:
+        reg = self.obs.registry
+        with self._reg_lock:
+            tenants = list(self._tenants.values())
+        for t in tenants:
+            self._mirror_tenant(reg, t)
+        fc = faults.counts()
+        arr = reg.counter("fault_arrivals_total",
+                          "arrivals at fault-injection points", ("point",))
+        fired = reg.counter("fault_fired_total",
+                            "faults actually injected", ("point",))
+        for point, n in fc["arrivals"].items():
+            arr.set_total(n, point=point)
+        for point, n in fc["fired"].items():
+            fired.set_total(n, point=point)
+        tr = self.obs.tracer.stats()
+        reg.counter("traces_seen_total",
+                    "requests considered for sampling").set_total(tr["seen"])
+        reg.counter("traces_sampled_total",
+                    "requests traced").set_total(tr["sampled"])
+        reg.counter("trace_spans_total",
+                    "spans emitted").set_total(tr["spans_emitted"])
+        reg.gauge("trace_ring_len",
+                  "spans currently buffered").set(tr["ring_len"])
+        if self.obs.audit is not None:
+            reg.counter("audit_events_total",
+                        "cache lifecycle events emitted").set_total(
+                self.obs.audit.stats()["emitted"])
+
+    def _mirror_tenant(self, reg, t: Tenant) -> None:
+        name = t.name
+        svc = t.stats.to_dict()
+        svc.pop("stages_ms", None)
+        for k, v in svc.items():
+            reg.counter(f"service_{k}_total", f"pipeline counter: {k}",
+                        ("tenant",)).set_total(v, tenant=name)
+        stage_h = reg.histogram("stage_latency_ms",
+                                "per-stage pipeline latency",
+                                ("tenant", "stage"))
+        for stage, hist in t.stats.stage_histograms().items():
+            stage_h.merge_snapshot(hist, tenant=name, stage=stage)
+        for k, v in t.cache.stats.to_dict().items():
+            if k in ("bytes_cached", "bytes_cold", "hit_rate"):
+                reg.gauge(f"cache_{k}", f"cache gauge: {k}",
+                          ("tenant",)).set(v, tenant=name)
+            else:
+                reg.counter(f"cache_{k}_total", f"cache counter: {k}",
+                            ("tenant",)).set_total(v, tenant=name)
+        for k, v in t.sql_canon.template_stats().items():
+            if k in ("templates", "bindings"):
+                reg.gauge(f"frontend_template_{k}",
+                          f"template cache footprint: {k}",
+                          ("tenant",)).set(v, tenant=name)
+            else:
+                reg.counter(f"frontend_template_{k}_total",
+                            f"template cache counter: {k}",
+                            ("tenant",)).set_total(v, tenant=name)
+        if t.nl is not None and hasattr(t.nl, "memo_hits"):
+            reg.counter("frontend_nl_calls_total", "NL canonicalizer calls",
+                        ("tenant",)).set_total(t.nl.calls, tenant=name)
+            reg.counter("frontend_nl_memo_hits_total", "NL memo hits",
+                        ("tenant",)).set_total(t.nl.memo_hits, tenant=name)
+        breakers = dict(t.resilience.breakers())
+        if hasattr(t.cache, "tier_stats"):
+            ts = t.cache.tier_stats()
+            for k in ("hot_entries", "cold_entries", "hot_bytes",
+                      "cold_bytes"):
+                reg.gauge(f"tier_{k}", f"tier gauge: {k}",
+                          ("tenant",)).set(ts[k], tenant=name)
+            store = ts.get("store")
+            if store:
+                for k, v in store.items():
+                    if isinstance(v, bool) or not isinstance(v, (int, float)):
+                        continue
+                    reg.gauge(f"store_{k}", f"durable store gauge: {k}",
+                              ("tenant",)).set(v, tenant=name)
+                cold = store.get("cold_breaker")
+                if cold is not None:
+                    breakers["cold_tier"] = cold
+        bstate = reg.gauge("breaker_state",
+                           "circuit breaker state: 0=closed 1=half_open "
+                           "2=open", ("tenant", "dependency"))
+        bopens = reg.counter("breaker_opens_total", "breaker open events",
+                             ("tenant", "dependency"))
+        brej = reg.counter("breaker_rejections_total",
+                           "calls rejected while open",
+                           ("tenant", "dependency"))
+        for dep, snap in breakers.items():
+            bstate.set(self._BREAKER_STATES.get(snap.get("state"), 0.0),
+                       tenant=name, dependency=dep)
+            bopens.set_total(snap.get("opens", 0), tenant=name,
+                             dependency=dep)
+            brej.set_total(snap.get("rejections", 0), tenant=name,
+                           dependency=dep)
+        if hasattr(t.cache, "stats_by_shard"):
+            g_entries = reg.gauge("shard_entries", "entries per shard",
+                                  ("tenant", "shard"))
+            g_inflight = reg.gauge("shard_inflight",
+                                   "single-flight leaders per shard",
+                                   ("tenant", "shard"))
+            for d in t.cache.stats_by_shard():
+                g_entries.set(d["entries"], tenant=name,
+                              shard=str(d["shard"]))
+                g_inflight.set(d["inflight"], tenant=name,
+                               shard=str(d["shard"]))
 
     def health(self, tenant: Optional[str] = None) -> dict:
         """The resilience plane's health surface: per-tenant circuit-breaker

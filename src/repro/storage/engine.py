@@ -51,6 +51,7 @@ from typing import Optional
 from ..analysis.sanitizer import make_lock, note_blocking
 from ..core.cache import CacheEntry, advance_stamp
 from ..core.table import ResultTable
+from ..obs.trace import adopt, child_span, current_ctx
 from ..resilience import faults
 from ..resilience.primitives import CircuitBreaker, backoff_delays
 from .coldstore import ColdTier
@@ -103,12 +104,17 @@ class _Spill:
     """One pending write-behind job: the claim for a key's next durable
     state.  Identity (``cur is job``) is the cancellation token."""
 
-    __slots__ = ("entry", "table", "meta")
+    __slots__ = ("entry", "table", "meta", "ctx")
 
-    def __init__(self, entry: CacheEntry, table: ResultTable, meta: dict):
+    def __init__(self, entry: CacheEntry, table: ResultTable, meta: dict,
+                 ctx=None):
         self.entry = entry
         self.table = table
         self.meta = meta
+        # the scheduling thread's trace context: the worker adopts it so the
+        # write-behind span lands under the originating request's trace even
+        # though it finishes after the response went out
+        self.ctx = ctx
 
 
 class TieredStore:
@@ -184,7 +190,7 @@ class TieredStore:
                     # pending job so the payload path's retry machinery owns
                     # this version's durability instead of silently losing it
                     self.wal_append_errors += 1
-            job = _Spill(entry, table, meta)
+            job = _Spill(entry, table, meta, ctx=current_ctx())
             self._pending[key] = job
             if self.async_spill:
                 self._queue.put(key)
@@ -224,6 +230,13 @@ class TieredStore:
         or cancelled.  Only after the budget is spent does the claim drop —
         with the error surfaced in ``spill_errors`` / ``spill_last_error``,
         never swallowed.  Returns True on a landed write."""
+        sattrs = {"key": key, "version": job.entry.version}
+        with adopt(job.ctx), child_span("store.spill", attrs=sattrs):
+            ok = self._attempt_write(key, job, sattrs)
+            sattrs["ok"] = ok
+            return ok
+
+    def _attempt_write(self, key: str, job: _Spill, sattrs: dict) -> bool:
         attempts = max(self.spill_attempts, 1)
         delays = backoff_delays(attempts, 0.002, 0.05, salt=key)
         err: Optional[BaseException] = None
@@ -242,11 +255,13 @@ class TieredStore:
                         return False
                     if attempt + 1 < attempts:
                         self.spill_retries += 1
+                        sattrs["retries"] = sattrs.get("retries", 0) + 1
                 if attempt + 1 < attempts:
                     time.sleep(delays[attempt])
         with self._lock:
             self.spill_errors += 1
             self.spill_last_error = f"{type(err).__name__}: {err}"
+            sattrs["error"] = self.spill_last_error
             if self._pending.get(key) is job:
                 del self._pending[key]
         return False

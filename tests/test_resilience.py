@@ -399,3 +399,97 @@ class TestNoEscape:
                                 "error")
             if r.status == "error":
                 assert r.error is not None and r.table is None
+
+
+# ------------------------------------------- chaos outcomes on request traces
+
+
+class TestChaosSpans:
+    """Resilience outcomes must be visible on the request's trace: a retried
+    execute carries its retry count, a breaker fail-fast names the breaker
+    state, a degraded serve is flagged on the failing stage's span — and
+    under a mixed fault plan every traced result still has a span for every
+    stage its provenance proves it passed through."""
+
+    def _obs_service(self, wl, *, policy=None, ttl_s=None):
+        from repro.obs import ObsConfig
+
+        svc = CacheService(obs=ObsConfig.full(sample_rate=1.0))
+        svc.register_tenant(
+            "t", schema=wl.schema,
+            backend=OlapExecutor(wl.dataset, impl="numpy"),
+            cache=SemanticCache(wl.schema,
+                                level_mapper=wl.dataset.level_mapper(),
+                                ttl_s=ttl_s),
+            resilience=policy)
+        return svc
+
+    def _stage_span(self, svc, res, stage):
+        spans = [s for s in svc.obs.tracer.spans(res.trace_id)
+                 if s["name"] == stage]
+        assert spans, f"no {stage} span on trace {res.trace_id}"
+        return spans[0]
+
+    def test_retry_count_lands_on_execute_span(self, ssb_small):
+        svc = self._obs_service(ssb_small, policy=ResiliencePolicy(
+            execute_attempts=3, retry_base_s=0.001, retry_max_s=0.002))
+        with faults.scoped("backend.error:0.5:9"):
+            results = [svc.submit(QueryRequest(
+                sql=sql_region(where=f"d_year = {1992 + i}"), tenant="t"))
+                for i in range(6)]
+        assert all(r.status == "miss" for r in results)
+        retried = [r for r in results
+                   if any(p.startswith("retry:") for p in r.provenance)]
+        assert retried  # seed 9: at least one request needed a retry
+        for r in retried:
+            n = next(int(p.split(":", 1)[1]) for p in r.provenance
+                     if p.startswith("retry:"))
+            # both the finalize-time stage span and the live backend span
+            # carry the count
+            assert self._stage_span(svc, r, "execute")["attrs"][
+                "retries"] == n
+            assert self._stage_span(svc, r, "execute.backend")["attrs"][
+                "retries"] == n
+
+    def test_breaker_fail_fast_named_on_error_span(self, ssb_small):
+        svc = self._obs_service(ssb_small, policy=ResiliencePolicy(
+            execute_attempts=1, breaker_failures=2, breaker_recovery_s=60.0))
+        with faults.scoped("backend.error:1.0"):
+            for i in range(3):
+                res = svc.submit(QueryRequest(
+                    sql=sql_region(f"SUM(lo_revenue) AS r{i}"), tenant="t"))
+        assert res.error.kind == "breaker_open"
+        span = self._stage_span(svc, res, "execute")
+        assert span["attrs"]["failure_kind"] == "breaker_open"
+        assert span["attrs"]["breaker"] == "open"
+        assert span["attrs"]["degraded"] is False
+        root = self._stage_span(svc, res, "request")
+        assert "breaker:open" in root["attrs"]["events"]
+
+    def test_degraded_serve_flagged_on_span(self, ssb_small):
+        svc = self._obs_service(ssb_small, ttl_s=0.05)
+        assert svc.submit(QueryRequest(sql=sql_region(),
+                                       tenant="t")).status == "miss"
+        time.sleep(0.08)  # TTL out the entry
+        with faults.scoped("backend.error:1.0"):
+            res = svc.submit(QueryRequest(sql=sql_region(), tenant="t"))
+        assert res.status == "degraded"
+        span = self._stage_span(svc, res, "execute")
+        assert span["attrs"]["degraded"] is True
+        assert span["attrs"]["failure_kind"] == "fault"
+        assert "degraded:stale" in self._stage_span(
+            svc, res, "request")["attrs"]["events"]
+
+    def test_chaos_traces_stay_complete(self, ssb_small):
+        from repro.obs import trace_completeness
+
+        svc = self._obs_service(ssb_small, policy=ResiliencePolicy(
+            execute_attempts=2, retry_base_s=0.001, retry_max_s=0.002))
+        reqs = [QueryRequest(sql=sql_region(where=f"d_year = {1992 + i % 4}"),
+                             tenant="t") for i in range(12)]
+        with faults.scoped("backend.error:0.25:11,"
+                           "canonicalize.timeout:0.25:12"):
+            results = svc.submit_batch(reqs)
+        comp = trace_completeness(results, svc.obs.tracer)
+        assert comp["traces_checked"] == len(results)
+        assert comp["ok"], comp["missing"]
